@@ -1,0 +1,35 @@
+"""Paper §7.8: area model — control unit + transposition unit."""
+from __future__ import annotations
+
+from .common import row
+
+XEON_E5_2697_MM2 = 456.0     # die area reference used by the paper
+
+
+def main() -> None:
+    print("# §7.8 — area overhead model")
+    bbop_fifo_kb, uprog_scratch_kb, uop_mem_b = 2, 2, 128
+    ctrl_mm2 = 0.04           # CACTI estimate at 22nm (paper)
+    transp_mm2 = 0.06         # object tracker 8kB + 2×4kB transpose buffers
+    total = ctrl_mm2 + transp_mm2
+    row("area/control_unit", 0,
+        f"mm2={ctrl_mm2} (bbop_fifo={bbop_fifo_kb}kB "
+        f"scratchpad={uprog_scratch_kb}kB uop_mem={uop_mem_b}B)")
+    row("area/transposition_unit", 0, f"mm2={transp_mm2}")
+    row("area/total", 0,
+        f"mm2={total} cpu_fraction={100 * total / XEON_E5_2697_MM2:.2f}% "
+        f"(paper: 0.2%)")
+    # μProgram sizes actually fit the paper's 128 B budget?
+    from repro.core.circuits import ALL_OPS, compile_operation
+    worst = 0
+    for op in ALL_OPS:
+        prog = compile_operation(op, 8)
+        size = 2 * (len(prog.prologue) + len(prog.body) + len(prog.epilogue)
+                    + 4)   # 2B per μOp + loop control
+        worst = max(worst, size)
+    row("area/uprogram_worst_bytes", 0,
+        f"bytes={worst} (paper budget: 128 B for the loopable ops)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig. 13: worst-case intra-bank (LISA) and inter-bank (RowClone PSM)
+data-movement overhead as a fraction of operation latency."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.circuits import ALL_OPS, compile_operation
+from repro.simdram.timing import MovementModel, SimdramPerfModel
+
+from .common import row
+
+
+def main() -> None:
+    m = SimdramPerfModel()
+    mv = MovementModel()
+    print("# Fig. 13 — data-movement overhead (% of op latency)")
+    intra_all, inter_all = [], []
+    for op in ALL_OPS:
+        intra, inter = [], []
+        for n in (8, 16, 32, 64):
+            if op == "division" and n > 32:
+                continue
+            t_op = m.latency_ns(compile_operation(op, n))
+            t_intra = mv.intra_bank_ns(n)     # move the n result rows
+            t_inter = mv.inter_bank_ns(n)
+            intra.append(100 * t_intra / (t_op + t_intra))
+            inter.append(100 * t_inter / (t_op + t_inter))
+        intra_all += intra
+        inter_all += inter
+        row(f"fig13/{op}", 0,
+            f"intra={np.mean(intra):.2f}% inter={np.mean(inter):.2f}% "
+            f"(max intra={max(intra):.2f}% inter={max(inter):.2f}%)")
+    row("fig13/avg", 0,
+        f"intra={np.mean(intra_all):.2f}% inter={np.mean(inter_all):.1f}% "
+        f"(paper: 0.39% / 17.5%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 12 / §7.4: SIMDRAM:16 vs DualityCache (ideal & realistic).
+
+DualityCache constants from the paper: in-cache op energy 60.1 nJ/bit-op
+units vs DRAM 13.3; a DRAM access costs 650× a DualityCache op; realistic
+config must stream the 45 MB working set from DRAM through a 35 MB cache.
+"""
+from __future__ import annotations
+
+from repro.core.circuits import compile_operation
+from repro.simdram.timing import SimdramPerfModel
+
+from .common import row
+
+CACHE_BW_GBS = 2000.0        # aggregate L3 slice bandwidth (DualityCache)
+DRAM_BW_GBS = 76.8
+WORKING_SET_MB = 45.0
+N_ELEMS = 64 * 1024 * 1024
+
+
+def main() -> None:
+    m = SimdramPerfModel()
+    print("# Fig. 12 — SIMDRAM:16 vs DualityCache (64M 32-bit ops)")
+    for op in ("addition", "subtraction", "multiplication", "division"):
+        prog = compile_operation(op, 32)
+        lanes = m.timing.row_bits * 16
+        t_simdram = m.latency_ns(prog) * -(-N_ELEMS // lanes)
+        # DualityCache ideal: bit-serial in-SRAM at cache clocks — model as
+        # command count × 1ns (SRAM row ops) over 35MB-worth of lanes
+        dc_lanes = 35 * 1024 * 1024 * 8 // 32
+        t_dc_ideal = prog.command_count() * 1.0 * -(-N_ELEMS // dc_lanes)
+        t_move = (WORKING_SET_MB * 3 / 1024) / DRAM_BW_GBS * 1e9  # in+out
+        t_dc_real = t_dc_ideal + t_move * -(-N_ELEMS // dc_lanes)
+        row(f"fig12/{op}", 0,
+            f"simdram16={t_simdram/1e6:.2f}ms dc_ideal={t_dc_ideal/1e6:.2f}ms"
+            f" dc_realistic={t_dc_real/1e6:.2f}ms "
+            f"speedup_vs_realistic={t_dc_real/t_simdram:.1f}x")
+    # energy (paper: SIMDRAM ≈ 600× less than DC:Realistic)
+    e_dram_bit, e_cache_bit, dram_access_mult = 13.3, 60.1, 650.0
+    e_simdram = e_dram_bit
+    e_dc_real = e_cache_bit + dram_access_mult * e_cache_bit / 32
+    row("fig12/energy_model", 0,
+        f"simdram_nj_bit={e_simdram} dc_realistic_nj_bit={e_dc_real:.0f} "
+        f"ratio={e_dc_real/e_simdram:.0f}x (paper: ~600x incl. DRAM loads)")
+
+
+if __name__ == "__main__":
+    main()

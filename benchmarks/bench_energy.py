@@ -1,0 +1,33 @@
+"""Paper Fig. 10: energy efficiency (GOps/s per Watt) vs CPU/GPU/Ambit."""
+from __future__ import annotations
+
+from repro.core.circuits import ALL_OPS, compile_operation
+from repro.simdram.timing import SimdramPerfModel
+
+from .common import row
+
+
+def main() -> None:
+    m = SimdramPerfModel()
+    print("# Fig. 10 — Throughput per Watt (32-bit)")
+    agg = {"cpu": 0.0, "gpu": 0.0, "ambit": 0.0}
+    for op in ALL_OPS:
+        prog = compile_operation(op, 32)
+        amb = compile_operation(op, 32, optimize=False)
+        s = m.throughput_per_watt(prog)
+        c = m.cpu_gops_per_watt(op, 32)
+        g = m.gpu_gops_per_watt(op, 32)
+        a = m.throughput_per_watt(amb)
+        agg["cpu"] += s / c
+        agg["gpu"] += s / g
+        agg["ambit"] += s / a
+        row(f"fig10/{op}/32b", 0,
+            f"simdram={s:.2f} cpu={c:.3f} gpu={g:.3f} ambit={a:.2f}")
+    n = len(ALL_OPS)
+    row("fig10/avg", 0,
+        f"vs_cpu={agg['cpu']/n:.0f}x vs_gpu={agg['gpu']/n:.1f}x "
+        f"vs_ambit={agg['ambit']/n:.2f}x (paper: 257x / 31x / 2.6x)")
+
+
+if __name__ == "__main__":
+    main()

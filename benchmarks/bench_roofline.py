@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun_baseline.json (produced by repro.launch.dryrun --all)
+and prints the per-cell three-term roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import row
+
+DEFAULT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun_baseline.json")
+
+
+def main(path: str | None = None) -> None:
+    path = path or os.environ.get("DRYRUN_JSON", DEFAULT)
+    if not os.path.exists(path):
+        row("roofline/missing", 0, f"no dry-run artifact at {path}")
+        return
+    cells = json.load(open(path))
+    print("# §Roofline — per (arch × shape), single-pod 16x16")
+    for r in cells:
+        if r.get("skipped") or "error" in r or r.get("mesh") != "16x16":
+            continue
+        ratio = r.get("useful_flops_ratio")
+        row(f"roofline/{r['arch']}/{r['shape']}", 0,
+            f"t_comp={r['t_compute_s']:.3e}s t_mem={r['t_memory_s']:.3e}s "
+            f"t_coll={r['t_collective_s']:.3e}s dom={r['dominant']} "
+            f"useful={ratio:.3f}" if ratio else "n/a")
+
+
+if __name__ == "__main__":
+    main()

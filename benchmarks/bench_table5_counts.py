@@ -1,0 +1,33 @@
+"""Paper Table 5: AAP/AP command-sequence counts per operation × element
+size, ours vs the paper's closed forms and the Ambit baseline."""
+from __future__ import annotations
+
+from repro.core.circuits import ALL_OPS, PAPER_COUNTS, compile_operation
+
+from .common import row, timed
+
+
+def main() -> None:
+    print("# Table 5 — command sequences (ours / paper / ambit-naive)")
+    total = {"ours": 0, "paper": 0, "ambit": 0}
+    for op in ALL_OPS:
+        for n in (8, 16, 32, 64):
+            if op == "division" and n > 32:
+                continue
+            prog, us = timed(lambda: compile_operation(op, n), repeat=1)
+            ours = prog.command_count()
+            paper = PAPER_COUNTS[op](n)
+            ambit = compile_operation(op, n, optimize=False).command_count()
+            total["ours"] += ours
+            total["paper"] += paper
+            total["ambit"] += ambit
+            row(f"table5/{op}/n{n}", us,
+                f"ours={ours} paper={paper} ambit={ambit} "
+                f"delta={(ours - paper) / paper:+.0%}")
+    row("table5/aggregate", 0,
+        f"ours={total['ours']} paper={total['paper']} ambit={total['ambit']} "
+        f"ambit_ratio={total['ambit'] / total['ours']:.2f}x (paper: 2.0x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 9: throughput of the 16 operations — SIMDRAM:1/4/16 vs the
+CPU/GPU bandwidth-roofline baselines and the Ambit baseline."""
+from __future__ import annotations
+
+from repro.core.circuits import ALL_OPS, compile_operation
+from repro.simdram.timing import SimdramPerfModel
+
+from .common import row
+
+
+def main() -> None:
+    m = SimdramPerfModel()
+    print("# Fig. 9 — GOps/s (32-bit elements)")
+    sums = {k: 0.0 for k in ("s1", "s4", "s16", "cpu", "gpu", "ambit")}
+    n_ops = 0
+    for op in ALL_OPS:
+        prog = compile_operation(op, 32)
+        amb = compile_operation(op, 32, optimize=False)
+        s1 = m.throughput_gops(prog, 1)
+        s16 = m.throughput_gops(prog, 16)
+        cpu = m.cpu_gops(op, 32)
+        gpu = m.gpu_gops(op, 32)
+        a1 = m.throughput_gops(amb, 1)
+        sums["s1"] += s1 / cpu
+        sums["s4"] += m.throughput_gops(prog, 4) / cpu
+        sums["s16"] += s16 / cpu
+        sums["gpu"] += gpu / cpu
+        sums["ambit"] += s1 / a1
+        n_ops += 1
+        row(f"fig9/{op}/32b", 0,
+            f"simdram1={s1:.2f} simdram16={s16:.2f} cpu={cpu:.2f} "
+            f"gpu={gpu:.2f} ambit1={a1:.2f}")
+    row("fig9/avg_vs_cpu", 0,
+        f"simdram1={sums['s1']/n_ops:.1f}x simdram4={sums['s4']/n_ops:.1f}x "
+        f"simdram16={sums['s16']/n_ops:.1f}x gpu={sums['gpu']/n_ops:.1f}x "
+        f"(paper: 5.5x/22x/88x; gpu 15.9x)")
+    row("fig9/avg_vs_ambit", 0,
+        f"simdram1={sums['ambit']/n_ops:.2f}x (paper: 2.0x)")
+    # element-size scaling (Fig. 9 right)
+    for n in (8, 16, 32, 64):
+        cls = {1: [], 2: [], 3: []}
+        from repro.core.circuits import CLASS_OF
+        for op in ALL_OPS:
+            if op == "division" and n > 32:
+                continue
+            t = m.throughput_gops(compile_operation(op, n), 1)
+            cls[CLASS_OF[op]].append(t)
+        row(f"fig9/scaling/n{n}", 0,
+            " ".join(f"class{c}={sum(v)/len(v):.2f}" for c, v in cls.items()
+                     if v))
+
+
+if __name__ == "__main__":
+    main()

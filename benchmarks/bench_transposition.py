@@ -1,0 +1,40 @@
+"""Paper Fig. 14: worst-case data-transposition overhead; plus wall-time of
+our Pallas transpose kernel vs the jnp reference on this host."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circuits import ALL_OPS, compile_operation
+from repro.simdram.timing import SimdramPerfModel, TranspositionModel
+
+from .common import row, timed
+
+
+def main() -> None:
+    m = SimdramPerfModel()
+    tr = TranspositionModel()
+    print("# Fig. 14 — transposition overhead (first-subarray critical path)")
+    overh = []
+    for op in ("addition", "multiplication", "and_reduction", "relu"):
+        for n in (8, 64):
+            t_op = m.latency_ns(compile_operation(op, n))
+            t_tr = tr.first_subarray_ns(n, m.timing.row_bits)
+            overh.append(100 * t_tr / (t_tr + t_op))
+            row(f"fig14/{op}/n{n}", 0,
+                f"transpose={t_tr/1e3:.1f}us op={t_op/1e3:.1f}us "
+                f"overhead={100*t_tr/(t_tr+t_op):.1f}%")
+    row("fig14/avg", 0, f"overhead={np.mean(overh):.1f}% (paper: 7.1% @1bank)")
+
+    # measured: Pallas transpose kernel vs jnp reference (host wall time)
+    from repro.kernels.bitplane_transpose import bitplane_transpose
+    from repro.kernels.ref import bitplane_transpose_ref
+    g = jnp.asarray(np.random.default_rng(0).integers(
+        0, 2**32, (2048, 32), dtype=np.uint32))
+    _, us_k = timed(lambda: bitplane_transpose(g, interpret=True).block_until_ready())
+    _, us_r = timed(lambda: bitplane_transpose_ref(g).block_until_ready())
+    row("fig14/pallas_transpose_2048grp", us_k, f"ref_us={us_r:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Shared benchmark plumbing: every bench emits `name,us_per_call,derived`
+CSV rows (us_per_call = wall-time of the representative computation on this
+host; derived = the paper-comparable metric)."""
+from __future__ import annotations
+
+import time
+
+
+def row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 3):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us

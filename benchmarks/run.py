@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper table/figure (+ the roofline
+table from the multi-pod dry-run artifacts).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,table3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_apps, bench_area, bench_data_movement,
+               bench_dualitycache, bench_energy, bench_reliability,
+               bench_roofline, bench_table5_counts, bench_throughput,
+               bench_transposition)
+
+BENCHES = {
+    "table5": bench_table5_counts.main,      # Table 5  command counts
+    "fig9": bench_throughput.main,           # Fig. 9   throughput
+    "fig10": bench_energy.main,              # Fig. 10  energy efficiency
+    "fig11": bench_apps.main,                # Fig. 11  real-world kernels
+    "fig12": bench_dualitycache.main,        # Fig. 12  DualityCache
+    "table3": bench_reliability.main,        # Table 3  reliability
+    "fig13": bench_data_movement.main,       # Fig. 13  data movement
+    "fig14": bench_transposition.main,       # Fig. 14  transposition
+    "area": bench_area.main,                 # §7.8     area
+    "roofline": bench_roofline.main,         # §Roofline (ours)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    failed = []
+    for name in names:
+        print(f"\n==== {name} ====", flush=True)
+        try:
+            BENCHES[name]()
+        except Exception:    # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED benches: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall benches complete")
+
+
+if __name__ == "__main__":
+    main()

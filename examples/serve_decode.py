@@ -1,0 +1,33 @@
+"""Batched serving example: prefill + greedy decode with sharded KV caches
+(reduced qwen config so it runs on CPU in seconds).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models.params import init_params
+from repro.models.transformer import model_defs
+from repro.serve.decode import greedy_decode
+
+
+def main():
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_params(model_defs(cfg), jax.random.key(0))
+    batch, prompt_len, gen = 4, 12, 16
+    prompts = jax.random.randint(jax.random.key(1), (batch, prompt_len),
+                                 0, cfg.vocab)
+    out = greedy_decode(params, cfg, prompts, steps=gen,
+                        max_seq=prompt_len + gen)
+    print(f"arch={cfg.name}  batch={batch}  prompt={prompt_len}  "
+          f"generated={gen}")
+    for i in range(batch):
+        print(f"  seq{i}: prompt={prompts[i].tolist()} "
+              f"-> {out[i].tolist()}")
+    assert out.shape == (batch, gen)
+    print("decode OK (greedy, KV-cached)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding, checkpointing, gradient compression,
+pipeline parallelism, elastic scaling and failover."""

@@ -1,0 +1,122 @@
+"""Logical-axis → mesh-axis sharding resolution.
+
+Model code names *logical* axes (see ``repro.models.params``); this module
+maps them to physical mesh axes with a divisibility-safe fallback: an axis
+whose dimension does not divide by the mesh axis size replicates instead
+(e.g. granite's single KV head, qwen2-vl's 12 heads on a 16-way model axis).
+Data-parallel batch axes span ``('pod', 'data')`` when the pod axis exists.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# tensor-parallel rules: logical axis → mesh axis
+LOGICAL_RULES: dict[str | None, str | None] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",       # expert parallelism over the model axis
+    "inner": "model",         # SSM inner channels
+    "embed": None,
+    "state": None,
+    "lora": None,
+    "layers": None,
+    None: None,
+}
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[name]
+
+
+def resolve_pspec(axes: tuple, shape: tuple[int, ...], mesh: Mesh) -> PS:
+    """Logical axes tuple → PartitionSpec with divisibility fallback."""
+    spec = []
+    for dim, logical in zip(shape, axes):
+        mesh_axis = LOGICAL_RULES.get(logical, None)
+        if mesh_axis is not None and dim % _axis_size(mesh, mesh_axis) == 0 \
+                and _axis_size(mesh, mesh_axis) > 1:
+            spec.append(mesh_axis)
+        else:
+            spec.append(None)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return PS(*spec)
+
+
+def tree_pspecs(defs, mesh: Mesh):
+    """ParamDef tree → PartitionSpec tree."""
+    from ..models.params import ParamDef
+    return jax.tree.map(
+        lambda d: resolve_pspec(d.axes, d.shape, mesh),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_shardings(defs, mesh: Mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        tree_pspecs(defs, mesh))
+
+
+def data_pspec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> PS:
+    """Batch sharding over (pod, data) with divisibility fallback."""
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if axes and global_batch % n == 0:
+        return PS(axes if len(axes) > 1 else axes[0],
+                  *([None] * extra_dims))
+    return PS(*([None] * (extra_dims + 1)))
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    """ShapeDtypeStruct tree for a data batch → NamedSharding tree."""
+    def one(sds):
+        return NamedSharding(mesh,
+                             data_pspec(mesh, sds.shape[0], len(sds.shape) - 1))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_pspec(sds, mesh: Mesh) -> PS:
+    """Decode caches: (layers, batch, seq, heads..) — shard batch over data
+    axes and the head/feature axis over 'model' when divisible."""
+    shape = sds.shape
+    if len(shape) == 0:
+        return PS()
+    if len(shape) == 1:                       # per-layer scalars
+        return PS(None)
+    axes: list = [None] * len(shape)
+    baxes = batch_axes(mesh)
+    n = 1
+    for a in baxes:
+        n *= mesh.shape[a]
+    if len(shape) >= 2 and shape[1] % max(n, 1) == 0 and baxes:
+        axes[1] = baxes if len(baxes) > 1 else baxes[0]
+    # shard KV heads / state heads over model when divisible
+    if len(shape) >= 4:
+        m = mesh.shape.get("model", 1)
+        if m > 1 and shape[3] % m == 0:
+            axes[3] = "model"
+    return PS(*axes)
+
+
+def cache_shardings(mesh: Mesh, cache_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, cache_pspec(s, mesh)),
+                        cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())

@@ -1,0 +1,89 @@
+"""jit'd wrappers around the Pallas kernels (+ row-file plumbing).
+
+``run_uprogram_kernel`` is the end-to-end Pallas path for any compiled
+μProgram: build a row file (D rows + C rows + B cells), encode the command
+stream, execute in the VMEM kernel, read outputs back.  It is semantically
+identical to ``repro.core.unrolled.run_unrolled`` (the trace-time path) and
+``repro.core.executor`` (the numpy reference) — tests assert all three agree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.uprogram import AAP, AP, DRow, UProgram
+from .bitplane_transpose import bitplane_transpose
+from .bitserial_matmul import bitserial_matmul, pack_signs
+from .uprog_executor import encode_program, uprog_execute
+
+__all__ = ["bitplane_transpose", "bitserial_matmul", "pack_signs",
+           "run_uprogram_kernel", "transpose_to_planes"]
+
+
+def _program_drows(prog: UProgram):
+    rows = set()
+    for u in prog.flatten():
+        if isinstance(u, AAP):
+            if isinstance(u.src, DRow):
+                rows.add((u.src.array, u.src.bit))
+            for d in u.dsts:
+                if isinstance(d, DRow):
+                    rows.add((d.array, d.bit))
+    return sorted(rows)
+
+
+def run_uprogram_kernel(prog: UProgram, operands: dict[str, jax.Array],
+                        out_bits: dict[str, int] | None = None,
+                        interpret: bool = True) -> dict[str, jax.Array]:
+    """Execute a μProgram via the Pallas row-file kernel.
+
+    operands: name → uint32[n_bits, W] bit-planes, W a multiple of 128.
+    """
+    words = next(iter(operands.values())).shape[1]
+    drows = _program_drows(prog)
+    index: dict = {}
+    planes = []
+
+    def add_row(key, data):
+        index[key] = len(planes) + 1   # 1-based
+        planes.append(data)
+
+    zero = jnp.zeros((words,), jnp.uint32)
+    for key in drows:
+        arr, bit = key
+        if arr in operands and bit < operands[arr].shape[0]:
+            add_row(key, operands[arr][bit])
+        else:
+            add_row(key, zero)
+    add_row("C0", zero)
+    add_row("C1", jnp.full((words,), jnp.uint32(0xFFFFFFFF)))
+    for cell in range(6):
+        add_row(("cell", cell), zero)
+    rows = jnp.stack(planes)
+    pad = (-words) % 128
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+        rows = rows.at[index["C1"] - 1, words:].set(jnp.uint32(0xFFFFFFFF))
+    cmds = encode_program(prog, index)
+    final = uprog_execute(cmds, rows, interpret=interpret)
+    final = final[:, :words]
+    out_bits = out_bits or {}
+    outs = {}
+    for name in prog.outputs:
+        nb = out_bits.get(name, prog.n_bits)
+        sel = [index.get((name, i), index["C0"]) - 1 for i in range(nb)]
+        outs[name] = final[jnp.array(sel)]
+    return outs
+
+
+def transpose_to_planes(x: jax.Array, n_bits: int,
+                        interpret: bool = True) -> jax.Array:
+    """int32[E] → uint32[n_bits, E/32] via the Pallas transpose kernel.
+
+    E must be a multiple of 32·128 (one kernel block); callers pad.
+    The kernel produces 32 planes; the top 32−n_bits are dropped.
+    """
+    (e,) = x.shape
+    groups = x.astype(jnp.uint32).reshape(e // 32, 32)
+    planes = bitplane_transpose(groups, interpret=interpret)
+    return planes[:n_bits]

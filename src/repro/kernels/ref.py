@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def popcount_ref(v: jax.Array) -> jax.Array:
+    """SWAR popcount over uint32."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def bitplane_transpose_ref(groups: jax.Array) -> jax.Array:
+    """uint32[G, 32] (element words, horizontal) → uint32[32, G] bit-planes.
+
+    out[i, g] bit e  ==  bit i of groups[g, e].
+    """
+    g, e = groups.shape
+    assert e == 32
+    bits = (groups[:, :, None] >> jnp.arange(32, dtype=jnp.uint32)) & 1
+    # bits[g, e, i] = bit i of element e in group g
+    planes = (bits.astype(jnp.uint32)
+              << jnp.arange(32, dtype=jnp.uint32)[None, :, None]).sum(
+        axis=1, dtype=jnp.uint32)
+    return planes.T  # (32, G)
+
+
+def bitserial_matmul_ref(a_packed: jax.Array, b_packed: jax.Array,
+                         k_bits: int) -> jax.Array:
+    """XNOR-net matmul oracle over sign-packed operands.
+
+    a_packed: uint32[M, K/32], b_packed: uint32[N, K/32]; bit=1 encodes +1,
+    bit=0 encodes −1.  Returns int32[M, N] = Σ_k a_k·b_k = K − 2·popc(a⊕b).
+    """
+    x = a_packed[:, None, :] ^ b_packed[None, :, :]
+    mismatches = popcount_ref(x).sum(-1)
+    return (k_bits - 2 * mismatches).astype(jnp.int32)
+
+
+def uprog_maj_ref(rows: jax.Array, cmds: jax.Array) -> jax.Array:
+    """Oracle for the μProgram executor kernel.
+
+    rows: uint32[R, W] row file.  cmds: int32[N, 4] with
+      (op, a, b, c):  op=0 → copy rows[b] (xor 0x1-flagged complement) to a;
+                      op=1 → rows[a],rows[b],rows[c] ← MAJ(...).
+    Row operands encode complement reads in the sign bit (negative = ~row).
+    """
+    def rd(rows, idx):
+        neg = idx < 0
+        v = rows[jnp.abs(idx) - 1]
+        return jnp.where(neg, ~v, v)
+
+    def step(rows, cmd):
+        op, a, b, c = cmd[0], cmd[1], cmd[2], cmd[3]
+        va, vb, vc = rd(rows, a), rd(rows, b), rd(rows, c)
+        maj = (va & vb) | (va & vc) | (vb & vc)
+        cpy = vb
+
+        def wr(rows, idx, val):
+            neg = idx < 0
+            val = jnp.where(neg, ~val, val)
+            return rows.at[jnp.abs(idx) - 1].set(val)
+
+        rows_maj = wr(wr(wr(rows, a, maj), b, maj), c, maj)
+        rows_cpy = wr(rows, a, cpy)
+        return jnp.where(op == 1, rows_maj, rows_cpy), None
+
+    rows, _ = jax.lax.scan(step, rows, cmds)
+    return rows

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: μProgram executor over a VMEM-resident row file.
+
+The TPU analogue of the SIMDRAM control unit's μOp Processing FSM (paper
+Fig. 7): the encoded AAP/AP command stream drives a row file held in VMEM,
+with the lane dimension tiled across the grid (each grid step is an
+independent slice of SIMD lanes — the paper's bank/subarray parallelism).
+
+Command encoding (int32[N, 4]):
+    (op, a, b, c)
+    op = 0: COPY  row|a| ← read(b)                      (AAP)
+    op = 1: MAJ   rows |a|,|b|,|c| ← MAJ(read(a),read(b),read(c))   (AP)
+Row operands are 1-based; a negative index reads/writes the complement
+(dual-contact-cell port).  Index 0 is reserved (reads as constant 0; the
+C1 row is a regular row pre-filled with ones).
+
+The command stream lives in SMEM via PrefetchScalarGridSpec so the FSM loop
+is scalar-driven while row data stays vectorized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE_BLOCK = 128
+SUBLANE = 8
+
+
+def _read(rows, idx):
+    v = rows[jnp.abs(idx) - 1]
+    return jnp.where(idx < 0, ~v, v)
+
+
+def _write(rows, idx, val):
+    val = jnp.where(idx < 0, ~val, val)
+    return rows.at[jnp.abs(idx) - 1].set(val)
+
+
+def _kernel(cmds_ref, rows_ref, out_ref, *, n_cmds: int):
+    rows = rows_ref[...]
+
+    def body(t, rows):
+        op = cmds_ref[t, 0]
+        a, b, c = cmds_ref[t, 1], cmds_ref[t, 2], cmds_ref[t, 3]
+        va, vb, vc = _read(rows, a), _read(rows, b), _read(rows, c)
+        maj = (va & vb) | (va & vc) | (vb & vc)
+        is_maj = op == 1
+        val_a = jnp.where(is_maj, maj, vb)
+        rows = _write(rows, a, val_a)
+
+        def maj_writes(rows):
+            return _write(_write(rows, b, maj), c, maj)
+
+        rows = jax.lax.cond(is_maj, maj_writes, lambda r: r, rows)
+        return rows
+
+    rows = jax.lax.fori_loop(0, n_cmds, body, rows)
+    out_ref[...] = rows
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def uprog_execute(cmds: jax.Array, rows: jax.Array,
+                  interpret: bool = False) -> jax.Array:
+    """Run an encoded command stream over a row file.
+
+    cmds: int32[N, 4]; rows: uint32[R, W] with W a multiple of 128.
+    Returns the final row file.
+    """
+    n_cmds = cmds.shape[0]
+    r, w = rows.shape
+    assert w % LANE_BLOCK == 0
+    grid = (w // LANE_BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_cmds=n_cmds),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((r, LANE_BLOCK), lambda i, cmds: (0, i))],
+            out_specs=pl.BlockSpec((r, LANE_BLOCK), lambda i, cmds: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((r, w), jnp.uint32),
+        interpret=interpret,
+    )(cmds, rows)
+
+
+# ---------------------------------------------------------------------------
+# μProgram → command-stream encoding
+# ---------------------------------------------------------------------------
+
+def encode_program(prog, row_index: dict) -> jax.Array:
+    """Encode a flattened μProgram against a row-index map.
+
+    ``row_index`` maps RowRef keys to 1-based row numbers:
+      ('array', bit) for D rows, cell ints 0..5 for B cells, 'C1' for the
+      all-ones row; C0 reads as the reserved index 0.
+    Multi-destination AAPs are split into one command per destination (same
+    bitline value semantics); Case-2 fused AAPs emit MAJ + copy.
+    """
+    from ..core.uprogram import AAP, AP, CRow, DRow, Port
+
+    def enc(ref) -> int:
+        if isinstance(ref, Port):
+            base = row_index[("cell", ref.cell)]
+            return -base if ref.neg else base
+        if isinstance(ref, CRow):
+            return row_index["C1"] if ref.one else row_index["C0"]
+        if isinstance(ref, DRow):
+            return row_index[(ref.array, ref.bit)]
+        raise TypeError(ref)
+
+    out = []
+    for u in prog.flatten():
+        if isinstance(u, AP):
+            a, b, c = (enc(p) for p in u.ports)
+            out.append((1, a, b, c))
+        elif isinstance(u, AAP):
+            if isinstance(u.src, tuple):
+                a, b, c = (enc(p) for p in u.src)
+                out.append((1, a, b, c))
+                src = enc(u.src[0])
+            else:
+                src = enc(u.src)
+            for d in u.dsts:
+                out.append((0, enc(d), src, src))
+        else:
+            raise TypeError(u)
+    return jnp.array(out, jnp.int32)

@@ -1,0 +1,571 @@
+"""Core layers: RMSNorm, RoPE/M-RoPE, GQA & MLA attention, dense & MoE MLPs,
+Mamba2/SSD mixer — everything the 10 assigned architectures compose from.
+
+Conventions
+-----------
+* every layer provides ``<layer>_defs(cfg) → ParamDef tree`` and
+  ``<layer>(params, x, ...) → y`` (pure functions, no classes);
+* compute runs in ``cfg.compute_dtype`` (bf16), params stored f32;
+* decode paths take/return explicit caches (KV, MLA latent, SSM state);
+* attention uses a causal mask; decode attends to the full cache prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import ParamDef
+
+P = ParamDef
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int):
+    return {"scale": P((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * params["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl: 3-section rotary over (t, h, w) positions;
+# with text-only inputs all three sections see the same position index, which
+# reduces to standard RoPE — the vision frontend stub supplies t/h/w ids)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float = 1e4, mrope_sections=None):
+    """x: (..., S, H, hd); positions: (..., S) or (..., S, 3) for M-RoPE."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    if positions.ndim == x.ndim - 2:                   # plain RoPE
+        ang = positions[..., :, None].astype(jnp.float32) * freqs
+    else:                                              # M-RoPE (S, 3)
+        sections = mrope_sections or (hd // 6, hd // 6, hd // 2 - 2 * (hd // 6))
+        parts = []
+        for s, sec in enumerate(sections):
+            pos = positions[..., s]
+            parts.append(pos[..., :, None].astype(jnp.float32)
+                         * freqs[sum(sections[:s]):sum(sections[:s]) + sec])
+        ang = jnp.concatenate(parts, -1)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype)
+    y2 = x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype)
+    return jnp.stack([y1, y2], -1).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig):
+    d, hd, nh, nkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "wq": P((d, nh, hd), ("embed", "heads", None)),
+        "wk": P((d, nkv, hd), ("embed", "kv_heads", None)),
+        "wv": P((d, nkv, hd), ("embed", "kv_heads", None)),
+        "wo": P((nh, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = P((nh, hd), ("heads", None), init="zeros")
+        defs["bk"] = P((nkv, hd), ("kv_heads", None), init="zeros")
+        defs["bv"] = P((nkv, hd), ("kv_heads", None), init="zeros")
+    return defs
+
+
+# block sizes for the online-softmax (flash) attention path
+FLASH_BLOCK_Q = 1024
+FLASH_BLOCK_K = 1024
+FLASH_THRESHOLD = 4096       # naive path below this many score elements²
+
+
+def _sdpa_naive(q, k, v, causal: bool, q_offset=0):
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd) — grouped by broadcasting."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    q = q.reshape(b, s, kv, group, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / math.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + q_offset
+        kpos = jnp.arange(t)[None, :]
+        mask = qpos >= kpos
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, -1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _flash_attn(q, k, v, causal: bool, q_offset=0, kv_len=None,
+                block_q: int = FLASH_BLOCK_Q, block_k: int = FLASH_BLOCK_K):
+    """Online-softmax attention: O(S·hd) memory instead of O(S·T).
+
+    q: (B,S,H,hd); k/v: (B,T,KV,hd).  ``kv_len``: optional scalar — only
+    cache positions < kv_len + current block are attendable (decode).
+    The double loop is (scan over q blocks) × (scan over kv blocks), which
+    XLA pipelines; this is the memory-term optimization that makes the 32k
+    prefill and 500k decode cells compile within HBM.
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    nq, nk = -(-s // bq), -(-t // bk)
+    pad_q, pad_k = nq * bq - s, nk * bk - t
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    hd_v = v.shape[-1]
+    qb = q.reshape(b, nq, bq, kv, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nk, bk, kv, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, bk, kv, hd_v).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_block(qi, q_blk):
+        # q_blk: (B, KV, G, bq, hd)
+        qpos = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inp
+            kpos = ki * bk + jnp.arange(bk)
+            sc = jnp.einsum("bkgqd,bktd->bkgqt", q_blk, k_blk) * scale
+            sc = sc.astype(jnp.float32)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if kv_len is not None:
+                mask &= kpos[None, :] <= (kv_len + qpos[:, None])
+            mask &= (kpos < t)[None, :]
+            sc = jnp.where(mask[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bkgqt,bktd->bkgqd",
+                                    p.astype(v_blk.dtype), v_blk))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, bq, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))
+    # out: (nq, B, KV, G, bq, hd_v) → (B, S, H, hd_v)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * bq, h, hd_v)
+    return out[:, :s].astype(v.dtype)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0):
+    s, t = q.shape[1], k.shape[1]
+    if s * t <= FLASH_THRESHOLD * FLASH_THRESHOLD:
+        return _sdpa_naive(q, k, v, causal, q_offset)
+    return _flash_attn(q, k, v, causal, q_offset)
+
+
+def attention(params, cfg: ModelConfig, x, positions, cache=None,
+              mrope_positions=None):
+    """Returns (y, new_cache).  cache = dict(k, v, pos) for decode."""
+    dt = _dt(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    pos = mrope_positions if (cfg.rope == "mrope" and mrope_positions
+                              is not None) else positions
+    if cfg.rope != "none":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    if cache is None:
+        y = _sdpa(q, k, v, causal=True)
+        new_cache = None
+    elif "k_scale" in cache:
+        # int8-quantized KV cache: store int8 + per-(token, head) scale;
+        # the HBM stream for the dominant decode read halves vs bf16
+        def quant(x):
+            s = jnp.max(jnp.abs(x), -1, keepdims=True) / 127.0 + 1e-8
+            return jnp.round(x / s).astype(jnp.int8), s[..., 0].astype(
+                jnp.float32)
+        kq, ks = quant(k)
+        vq, vs = quant(v)
+        upd = lambda c, u: jax.lax.dynamic_update_slice_in_dim(
+            c, u.astype(c.dtype), cache["pos"], 1)
+        ck, cks = upd(cache["k"], kq), upd(cache["k_scale"], ks)
+        cv, cvs = upd(cache["v"], vq), upd(cache["v_scale"], vs)
+        kd = ck.astype(dt) * cks.astype(dt)[..., None]
+        vd = cv.astype(dt) * cvs.astype(dt)[..., None]
+        y = _masked_decode_attn(q, kd, vd, cache["pos"])
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                     "pos": cache["pos"] + q.shape[1]}
+    else:
+        # decode: scatter this step's k/v at cache['pos']
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache["pos"], 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache["pos"], 1)
+        y = _masked_decode_attn(q, ck.astype(dt), cv.astype(dt), cache["pos"])
+        new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + q.shape[1]}
+    y = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt))
+    return y, new_cache
+
+
+def _masked_decode_attn(q, k, v, q_pos):
+    """Cached attention: query i (global position q_pos+i) attends to cache
+    positions ≤ its own (supports both 1-token decode and multi-token
+    cache-populating prefill).  Long caches take the online-softmax path."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    if s * t > FLASH_THRESHOLD * FLASH_THRESHOLD or t > 16384:
+        return _flash_attn(q, k, v, causal=True, q_offset=q_pos)
+    q = q.reshape(b, s, kv, h // kv, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / math.sqrt(hd)
+    qpos = jnp.arange(s)[:, None] + q_pos
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= qpos                                   # (s, t)
+    scores = jnp.where(mask[None, None, None, :, :],
+                       scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, -1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg: ModelConfig):
+    d, hd, nh = cfg.d_model, cfg.hd, cfg.n_heads
+    r, rq, rh = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
+    defs = {
+        "w_dkv": P((d, r + rh), ("embed", "lora")),        # joint kv + rope-k
+        "w_uk": P((r, nh, hd), ("lora", "heads", None)),
+        "w_uv": P((r, nh, hd), ("lora", "heads", None)),
+        "wo": P((nh, hd, d), ("heads", None, "embed")),
+    }
+    if rq:
+        defs["w_dq"] = P((d, rq), ("embed", "lora"))
+        defs["w_uq"] = P((rq, nh, hd + rh), ("lora", "heads", None))
+    else:
+        defs["w_q"] = P((d, nh, hd + rh), ("embed", "heads", None))
+    return defs
+
+
+def mla_attention(params, cfg: ModelConfig, x, positions, cache=None):
+    """Latent attention; decode caches the compressed kv latent only."""
+    dt = _dt(cfg)
+    r, rh, nh, hd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.n_heads, cfg.hd
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    if cfg.q_lora_rank:
+        q = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dt))
+        q = jnp.einsum("bsr,rhk->bshk", q, params["w_uq"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"].astype(dt))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd + rh)
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c, params["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", c, params["w_uv"].astype(dt))
+        s = x.shape[1]
+        if s > FLASH_THRESHOLD:
+            # concatenate the nope/rope score components into one head dim
+            # and take the online-softmax path (32k prefill)
+            q_cat = jnp.concatenate([q_nope, q_rope], -1)
+            k_cat = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (rh,))],
+                -1)
+            y = _flash_attn(q_cat, k_cat, v, causal=True)
+        else:
+            scores = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+                      + jnp.einsum("bshk,btzk->bhst", q_rope, k_rope)) * scale
+            mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+            scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+            w = jax.nn.softmax(scores, -1).astype(dt)
+            y = jnp.einsum("bhst,bthk->bshk", w, v)
+        new_cache = None
+    else:
+        # absorbed decode: score against the latent cache directly
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c.astype(cache["c"].dtype), cache["pos"], 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+            cache["pos"], 1)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(dt))
+        scores = (jnp.einsum("bshr,btr->bhst", q_abs, cc.astype(dt))
+                  + jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(dt))) * scale
+        s = x.shape[1]
+        qpos = jnp.arange(s)[:, None] + cache["pos"]
+        mask = jnp.arange(cc.shape[1])[None, :] <= qpos       # (s, t)
+        scores = jnp.where(mask[None, None, :, :],
+                           scores.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(scores, -1).astype(dt)
+        y_lat = jnp.einsum("bhst,btr->bshr", w, cc.astype(dt))
+        y = jnp.einsum("bshr,rhk->bshk", y_lat, params["w_uv"].astype(dt))
+        new_cache = {"c": cc, "k_rope": cr, "pos": cache["pos"] + x.shape[1]}
+    y = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs (SwiGLU) — dense, MoE, and the PuM (bit-serial) variant
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {"w_gate": P((d, f), ("embed", "mlp")),
+            "w_up": P((d, f), ("embed", "mlp")),
+            "w_down": P((f, d), ("mlp", "embed"))}
+
+
+def mlp(params, cfg: ModelConfig, x):
+    dt = _dt(cfg)
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      params["w_down"].astype(dt))
+
+
+def pum_mlp(params, cfg: ModelConfig, x):
+    """SIMDRAM-backed binarized MLP: weights/activations sign-binarized and
+    contracted with the XNOR-popcount identity (the paper's XNOR-NET app
+    class), with straight-through gradients.  Numerically this equals
+    sign(x)·sign(W) matmul — the Pallas ``bitserial_matmul`` kernel computes
+    the same contraction from packed bit-planes (asserted in tests)."""
+    dt = _dt(cfg)
+
+    @jax.custom_vjp
+    def sign_ste(v):
+        return jnp.sign(v) + (v == 0).astype(v.dtype)
+
+    def fwd(v):
+        return sign_ste(v), v
+
+    def bwd(v, g):
+        return (g * (jnp.abs(v) <= 1).astype(g.dtype),)  # clipped STE
+
+    sign_ste.defvjp(fwd, bwd)
+
+    scale = jnp.mean(jnp.abs(x), -1, keepdims=True)
+    xb = sign_ste(x)
+    g = jnp.einsum("bsd,df->bsf", xb, sign_ste(params["w_gate"]).astype(dt))
+    u = jnp.einsum("bsd,df->bsf", xb, sign_ste(params["w_up"]).astype(dt))
+    h = jax.nn.silu(g * scale) * (u * scale)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+
+
+def moe_defs(cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    defs = {
+        "router": P((d, e), ("embed", None)),
+        "w_gate": P((e, d, f), ("experts", "embed", None)),
+        "w_up": P((e, d, f), ("experts", "embed", None)),
+        "w_down": P((e, f, d), ("experts", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = mlp_defs(cfg, cfg.d_expert * cfg.n_shared_experts)
+    return defs
+
+
+MOE_GROUP = 256        # tokens per routing group (bounds dispatch memory)
+
+
+def moe(params, cfg: ModelConfig, x):
+    """Top-k capacity-based MoE (Switch-style dispatch/combine einsums, the
+    standard TPU formulation).  Tokens route in groups of ``MOE_GROUP`` so
+    the dispatch tensor is O(T·E·cf·k·GROUP/E) instead of O(T²) — this is
+    what lets the 1M-token train_4k cells compile; tokens beyond a group's
+    per-expert capacity drop (standard behavior)."""
+    dt = _dt(cfg)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    t_total = b * s
+    gs = min(MOE_GROUP, t_total)
+    while t_total % gs:
+        gs //= 2
+    ng = t_total // gs
+    tokens = x.reshape(ng, gs, d)
+    logits = jnp.einsum("gtd,de->gte", tokens.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (G, S, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    capacity = max(1, int(cfg.capacity_factor * gs * k / e))
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)   # (G, S, k, E)
+    assign = onehot.sum(2)                                    # (G, S, E)
+    pos = jnp.cumsum(assign, 1) - assign                      # slot per (G,S,E)
+    within = (pos < capacity) * assign
+    dispatch = within[..., None] * jax.nn.one_hot(pos, capacity,
+                                                  dtype=jnp.float32)
+    combine = jnp.einsum("gske,gsk->gse", onehot, gate_vals)
+    combine = combine[..., None] * dispatch                   # (G, S, E, C)
+    xs = jnp.einsum("gsec,gsd->gecd", dispatch.astype(dt), tokens)
+    g = jnp.einsum("gecd,edf->gecf", xs, params["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", xs, params["w_up"].astype(dt))
+    ys = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u,
+                    params["w_down"].astype(dt))
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(dt), ys)
+    if cfg.n_shared_experts:
+        out = out.reshape(b, s, d) + mlp(params["shared"], cfg, x)
+        out = out.reshape(ng, gs, d)
+    # auxiliary load-balance loss
+    me = probs.mean((0, 1))
+    ce = assign.mean((0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD mixer
+# ---------------------------------------------------------------------------
+
+def ssm_defs(cfg: ModelConfig):
+    d, di, st, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    return {
+        "w_in": P((d, 2 * di + 2 * st + nh), ("embed", "inner")),
+        "conv_w": P((4, di + 2 * st), (None, "inner"), scale=0.5),
+        "a_log": P((nh,), (None,), init="ones"),
+        "d_skip": P((nh,), (None,), init="ones"),
+        "dt_bias": P((nh,), (None,), init="zeros"),
+        "norm": rmsnorm_defs(di),
+        "w_out": P((di, d), ("inner", "embed")),
+    }
+
+
+def _ssd_chunked(xh, a, b, c, chunk: int, f32: bool = True):
+    """SSD scan.  xh: (B,S,nh,hd) inputs ·dt;  a: (B,S,nh) per-step decay in
+    (0,1);  b,c: (B,S,N).  Returns (B,S,nh,hd) contraction with state dim N.
+
+    Quadratic-within-chunk + carried state across chunks (Mamba2 SSD).
+    ``f32=False`` keeps the big einsum operands in bf16 with f32 accumulation
+    (decay/cumsum stay f32) — the memory-term optimization for SSM cells.
+    """
+    bs, s, nh, hd = xh.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    mm = jnp.float32 if f32 else jnp.bfloat16
+    acc = dict(preferred_element_type=jnp.float32)
+    xh = xh.reshape(bs, nc, chunk, nh, hd)
+    a = a.reshape(bs, nc, chunk, nh)
+    b = b.reshape(bs, nc, chunk, n)
+    c = c.reshape(bs, nc, chunk, n)
+    la = jnp.log(a + 1e-20)
+    cum = jnp.cumsum(la, 2)                       # (B,NC,Q,nh)
+    # intra-chunk: G[t,s] = exp(cum[t]-cum[s]) for s<=t
+    gd = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,NC,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    g = jnp.where(mask[None, None, :, :, None], jnp.exp(gd), 0.0)
+    cb = jnp.einsum("bzqn,bzsn->bzqs", c.astype(mm), b.astype(mm), **acc)
+    y_intra = jnp.einsum("bzqs,bzqsh,bzshd->bzqhd", cb.astype(mm),
+                         g.astype(mm), xh.astype(mm), **acc)
+    # chunk summaries: state contribution of each chunk
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,NC,Q,nh)
+    chunk_state = jnp.einsum("bzsn,bzsh,bzshd->bzhdn",
+                             b.astype(mm), decay_to_end.astype(mm),
+                             xh.astype(mm), **acc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,NC,nh)
+
+    def scan_fn(h, inp):
+        st_z, dec_z = inp
+        h_new = h * dec_z[:, :, None, None] + st_z
+        return h_new, h
+
+    h0 = jnp.zeros((bs, nh, hd, n), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (B,NC,nh,hd,N)
+    y_inter = jnp.einsum("bzqn,bzqh,bzhdn->bzqhd", c.astype(mm),
+                         jnp.exp(cum).astype(mm), h_prev.astype(mm), **acc)
+    y = (y_intra + y_inter).reshape(bs, s, nh, hd)
+    return y
+
+
+def ssm_mixer(params, cfg: ModelConfig, x, cache=None):
+    """Mamba2 block.  cache = dict(conv (B,3,ch), state (B,nh,hd,N), pos)."""
+    dt_ = _dt(cfg)
+    b_, s, d = x.shape
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    hd = di // nh
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dt_))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * st]
+    dt_raw = zxbcdt[..., 2 * di + 2 * st:]
+    # depthwise causal conv over xbc (width 4)
+    conv_w = params["conv_w"].astype(dt_)
+    if cache is None:
+        pad = jnp.zeros((b_, 3, xbc.shape[-1]), xbc.dtype)
+        xpad = jnp.concatenate([pad, xbc], 1)
+        conv = sum(xpad[:, i:i + s] * conv_w[i] for i in range(4))
+        new_conv_state = None
+    else:
+        xpad = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], 1)
+        conv = sum(xpad[:, i:i + s] * conv_w[i] for i in range(4))
+        new_conv_state = xpad[:, -3:]
+    conv = jax.nn.silu(conv)
+    xin, bmat, cmat = (conv[..., :di], conv[..., di:di + st],
+                       conv[..., di + st:])
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dtv)  # (B,S,nh)
+    xh = (xin.reshape(b_, s, nh, hd).astype(jnp.float32)
+          * dtv[..., None])
+    if cache is None:
+        chunk = min(cfg.ssm_chunk, s)
+        assert s % chunk == 0
+        y = _ssd_chunked(xh, a, bmat.astype(jnp.float32),
+                         cmat.astype(jnp.float32), chunk, f32=cfg.ssd_f32)
+        new_state = None
+    else:
+        # single-token recurrence: h' = a·h + x⊗B ; y = h'·C
+        h = cache["state"]
+        h = (h * a[:, 0, :, None, None]
+             + jnp.einsum("bhd,bn->bhdn", xh[:, 0], bmat[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bhdn,bn->bhd", h, cmat[:, 0].astype(jnp.float32))[:, None]
+        y = y.reshape(b_, 1, nh, hd)
+        new_state = h
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b_, s, di).astype(dt_)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_))
+    new_cache = (None if cache is None else
+                 {"conv": new_conv_state, "state": new_state,
+                  "pos": cache["pos"] + s})
+    return out, new_cache
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    return {"conv": (batch, 3, di + 2 * st),
+            "state": (batch, nh, di // nh, st)}

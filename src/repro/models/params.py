@@ -1,0 +1,83 @@
+"""Parameter definition framework: one source of truth for shapes, logical
+sharding axes, and initialization — so ``init``, ``jax.eval_shape`` (dry-run)
+and ``PartitionSpec`` trees never drift apart.
+
+Logical axes → mesh axes resolution happens in ``repro.distributed.sharding``;
+model code only names logical axes:
+
+  embed     d_model dims                (replicated)
+  vocab     vocabulary                  → 'model'
+  heads     attention-head dims         → 'model'
+  kv_heads  kv-head dims                → 'model' (replicates if indivisible)
+  mlp       FFN hidden                  → 'model'
+  experts   MoE expert dim              → 'model'  (expert parallelism)
+  inner     SSM inner channels          → 'model'
+  state     SSM state dim               (replicated)
+  lora      low-rank bottlenecks        (replicated)
+  layers    scan-stacked layer dim      (replicated)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"            # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Add a leading stacked-layer dim to every ParamDef (scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init,
+                           d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(defs, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            out.append(jax.random.normal(k, d.shape, dtype) * d.scale)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — the dry-run path (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def logical_specs(defs):
+    """Tree of logical-axis tuples, mirroring the params tree."""
+    return jax.tree.map(
+        lambda d: d.axes,
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_bytes(defs, bytes_per: int = 4) -> int:
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef)):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n * bytes_per
+    return total

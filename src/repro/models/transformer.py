@@ -1,0 +1,454 @@
+"""Model composition: decoder LMs, MoE LMs, enc-dec (whisper), hybrid
+(zamba2) and pure-SSM (mamba2) stacks, with scan-over-layers for compile
+scalability, per-family decode caches, and logical sharding specs.
+
+Entry points
+------------
+``model_defs(cfg)``      ParamDef tree (init / eval_shape / specs)
+``forward(params, cfg, batch, caches=None)`` → (logits, aux, new_caches)
+``init_cache_shapes(cfg, batch, seq)``       decode-cache ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (ParamDef, _dt, attention, attention_defs, mla_attention,
+                     mla_defs, mlp, mlp_defs, moe, moe_defs, pum_mlp,
+                     rmsnorm, rmsnorm_defs, ssm_cache_shape, ssm_defs,
+                     ssm_mixer)
+from .params import stack_defs
+
+P = ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Block definitions
+# ---------------------------------------------------------------------------
+
+def attn_block_defs(cfg: ModelConfig, cross: bool = False):
+    defs = {
+        "ln1": rmsnorm_defs(cfg.d_model),
+        "attn": mla_defs(cfg) if cfg.mla else attention_defs(cfg),
+        "ln2": rmsnorm_defs(cfg.d_model),
+        "ffn": moe_defs(cfg) if cfg.moe else mlp_defs(cfg),
+    }
+    if cross:
+        defs["ln_x"] = rmsnorm_defs(cfg.d_model)
+        defs["xattn"] = attention_defs(cfg)
+    return defs
+
+
+def ssm_block_defs(cfg: ModelConfig):
+    return {"ln": rmsnorm_defs(cfg.d_model), "mixer": ssm_defs(cfg)}
+
+
+def attn_block(params, cfg: ModelConfig, x, positions, cache=None,
+               mrope_positions=None, encoder_out=None):
+    # a cache dict may carry 'xk'/'xv' (precomputed cross-attention K/V) —
+    # split them out before the self-attention cache is used
+    cross_kv = None
+    if cache is not None and "xk" in cache:
+        cross_kv = (cache["xk"], cache["xv"])
+        cache = {k: v for k, v in cache.items() if k not in ("xk", "xv")}
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        y, new_cache = mla_attention(params["attn"], cfg, h, positions, cache)
+    else:
+        y, new_cache = attention(params["attn"], cfg, h, positions, cache,
+                                 mrope_positions)
+    x = x + y
+    if encoder_out is not None or cross_kv is not None:
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        y, _ = _cross_attention(params["xattn"], cfg, h, encoder_out,
+                                kv=cross_kv)
+        x = x + y
+    if cross_kv is not None and new_cache is not None:
+        new_cache = dict(new_cache, xk=cross_kv[0], xv=cross_kv[1])
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if cfg.moe:
+        y, aux = moe(params["ffn"], cfg, h)
+    else:
+        y = pum_mlp(params["ffn"], cfg, h) if cfg.pum_mlp else mlp(
+            params["ffn"], cfg, h)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux, new_cache
+
+
+def _cross_attention(params, cfg: ModelConfig, x, encoder_out, kv=None):
+    """Non-causal attention over encoder frames (whisper decoder).
+
+    ``kv``: precomputed (k, v) from the cross-KV cache — avoids recomputing
+    the encoder-side projections for all frames on every decode step."""
+    from .layers import _sdpa
+    dt = _dt(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if kv is not None:
+        k, v = kv[0].astype(dt), kv[1].astype(dt)
+    else:
+        k = jnp.einsum("btd,dhk->bthk", encoder_out, params["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", encoder_out, params["wv"].astype(dt))
+    y = _sdpa(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt)), None
+
+
+def ssm_block(params, cfg: ModelConfig, x, cache=None):
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    y, new_cache = ssm_mixer(params["mixer"], cfg, h, cache)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model defs
+# ---------------------------------------------------------------------------
+
+def model_defs(cfg: ModelConfig):
+    d, v = cfg.d_model, cfg.vocab
+    defs: dict = {"embed": P((v, d), ("vocab", "embed"), scale=0.01)}
+    pattern = cfg.pattern()
+    n_attn = sum(k == "attn" for k in pattern)
+    n_ssm = sum(k == "ssm" for k in pattern)
+    if cfg.family == "hybrid":
+        defs["ssm_blocks"] = stack_defs(ssm_block_defs(cfg), n_ssm)
+        defs["shared_attn"] = attn_block_defs(cfg)          # weight-tied
+    elif cfg.family == "ssm":
+        defs["ssm_blocks"] = stack_defs(ssm_block_defs(cfg), n_ssm)
+    else:
+        defs["blocks"] = stack_defs(
+            attn_block_defs(cfg, cross=cfg.enc_dec), n_attn)
+    if cfg.enc_dec:
+        enc_cfg = dataclasses.replace(cfg, moe=False, mla=False)
+        defs["enc_blocks"] = stack_defs(attn_block_defs(enc_cfg),
+                                        cfg.n_encoder_layers)
+        defs["enc_norm"] = rmsnorm_defs(d)
+    defs["final_norm"] = rmsnorm_defs(d)
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = P((d, v), ("embed", "vocab"), scale=0.01)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(stacked_params, fn, x, caches):
+    """lax.scan over stacked layer params (+ per-layer caches)."""
+    def body(carry, layer):
+        x, aux = carry
+        lp, lcache = layer
+        x, a, new_cache = fn(lp, x, lcache)
+        return (x, aux + a), new_cache
+
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        (stacked_params, caches))
+    return x, aux, new_caches
+
+
+def forward(params, cfg: ModelConfig, batch: dict, caches=None,
+            return_hidden: bool = False):
+    """batch: tokens (B,S) [+ positions, mrope_positions, encoder_frames].
+
+    Returns (logits, aux_loss, new_caches).  ``caches=None`` → train/prefill
+    (full causal attention); otherwise single-token decode against caches.
+    ``return_hidden=True`` returns the final-norm hidden states instead of
+    logits (chunked-vocab loss path).
+    """
+    dt = _dt(cfg)
+    tokens = batch["tokens"]
+    x = params["embed"].astype(dt)[tokens]
+    positions = batch.get("positions")
+    if positions is None:
+        start = caches["pos"] if caches is not None else 0
+        positions = jnp.arange(tokens.shape[1])[None, :] + start
+    mrope = batch.get("mrope_positions")
+
+    encoder_out = None
+    if cfg.enc_dec:
+        encoder_out = _encode(params, cfg, batch, caches)
+
+    remat = cfg.remat != "none"
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict = {} if caches is not None else None
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def block_fn(lp, x, lcache):
+            return attn_block(lp, cfg, x, positions, lcache, mrope,
+                              encoder_out)
+        fn = jax.checkpoint(block_fn) if remat and caches is None else block_fn
+        n = sum(k == "attn" for k in cfg.pattern())
+        if cfg.scan_layers:
+            layer_caches = caches["layers"] if caches is not None else None
+            if layer_caches is None:
+                layer_caches = jnp.zeros((n,), jnp.float32)  # dummy scan input
+                x, aux_total, _ = _scan_blocks(
+                    params["blocks"],
+                    lambda lp, x, _lc: fn(lp, x, None), x, layer_caches)
+            else:
+                x, aux_total, lc = _scan_blocks(params["blocks"], fn, x,
+                                                layer_caches)
+                new_caches["layers"] = lc
+        else:
+            # python-unrolled stack (cost-probe path; also usable for small
+            # models where unrolling compiles faster than scan)
+            lcs = []
+            for i in range(n):
+                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                lcache = (jax.tree.map(lambda a: a[i], caches["layers"])
+                          if caches is not None else None)
+                x, a, nc = fn(lp, x, lcache)
+                aux_total = aux_total + a
+                lcs.append(nc)
+            if caches is not None:
+                new_caches["layers"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *lcs)
+    elif cfg.family == "ssm":
+        def sfn(lp, x, lcache):
+            y, c = ssm_block(lp, cfg, x, lcache)
+            return y, jnp.zeros((), jnp.float32), c
+        sfn2 = jax.checkpoint(sfn) if remat and caches is None else sfn
+        n = sum(k == "ssm" for k in cfg.pattern())
+        if cfg.scan_layers:
+            layer_caches = (caches["layers"] if caches is not None
+                            else jnp.zeros((n,), jnp.float32))
+            if caches is None:
+                x, _, _ = _scan_blocks(params["ssm_blocks"],
+                                       lambda lp, x, _lc: sfn2(lp, x, None),
+                                       x, layer_caches)
+            else:
+                x, _, lc = _scan_blocks(params["ssm_blocks"], sfn2, x,
+                                        layer_caches)
+                new_caches["layers"] = lc
+        else:
+            lcs = []
+            for i in range(n):
+                lp = jax.tree.map(lambda a: a[i], params["ssm_blocks"])
+                lcache = (jax.tree.map(lambda a: a[i], caches["layers"])
+                          if caches is not None else None)
+                x, _, nc = sfn2(lp, x, lcache)
+                lcs.append(nc)
+            if caches is not None:
+                new_caches["layers"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *lcs)
+    elif cfg.family == "hybrid":
+        x, aux_total, hc = _hybrid_stack(params, cfg, x, positions, caches)
+        if caches is not None:
+            new_caches.update(hc)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if caches is not None:
+        new_caches["pos"] = caches["pos"] + tokens.shape[1]
+        if cfg.enc_dec:
+            new_caches["encoder_out"] = encoder_out
+    if return_hidden:
+        return x, aux_total, new_caches
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt)).astype(jnp.float32)
+    return logits, aux_total, new_caches
+
+
+def _encode(params, cfg: ModelConfig, batch, caches):
+    """Whisper encoder over precomputed frame embeddings (conv frontend is a
+    stub per the assignment: ``input_specs`` supplies frame embeddings)."""
+    if caches is not None and "encoder_out" in caches:
+        return caches["encoder_out"]
+    frames = batch["encoder_frames"].astype(_dt(cfg))
+    pos = jnp.arange(frames.shape[1])[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        y, _ = _noncausal_self_attn(lp["attn"], cfg, h, pos)
+        x = x + y
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(lp["ffn"], cfg, h)
+        return (x, aux), None
+
+    if cfg.scan_layers:
+        (x, _), _ = jax.lax.scan(body, (frames, jnp.zeros(())),
+                                 params["enc_blocks"])
+    else:
+        x = frames
+        for i in range(cfg.n_encoder_layers):
+            lp = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+            (x, _), _ = body((x, jnp.zeros(())), lp)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _noncausal_self_attn(params, cfg, x, positions):
+    from .layers import _sdpa, apply_rope
+    dt = _dt(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    y = _sdpa(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt)), None
+
+
+def _hybrid_stack(params, cfg: ModelConfig, x, positions, caches):
+    """Zamba2-style: a scan over Mamba2 layers with a single *weight-tied*
+    attention block applied after every ``shared_every`` SSM layers."""
+    pattern = cfg.pattern()
+    n_ssm = sum(k == "ssm" for k in pattern)
+    shared_after = jnp.array(
+        [1.0 if (i + 1) % 6 == 0 else 0.0 for i in range(n_ssm)])
+    shared_params = params["shared_attn"]
+    aux = jnp.zeros((), jnp.float32)
+
+    if caches is None:
+        def body(x, layer):
+            lp, is_shared = layer
+            x, _ = ssm_block(lp, cfg, x, None)
+
+            def with_shared(x):
+                y, _, _ = attn_block(shared_params, cfg, x, positions, None)
+                return y
+
+            x = jax.lax.cond(is_shared > 0, with_shared, lambda x: x, x)
+            return x, None
+
+        body = jax.checkpoint(body) if cfg.remat != "none" else body
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, (params["ssm_blocks"], shared_after))
+        else:
+            for i in range(n_ssm):
+                lp = jax.tree.map(lambda a: a[i], params["ssm_blocks"])
+                x, _ = body(x, (lp, shared_after[i]))
+        return x, aux, None
+
+    # decode: carry (x, shared-invocation index); per-invocation attn caches
+    ssm_caches = caches["ssm"]
+    attn_caches = caches["shared_attn"]   # stacked over invocations
+
+    def body(carry, layer):
+        x, inv = carry
+        lp, lcache, is_shared = layer
+        x, new_ssm = ssm_block(lp, cfg, x, lcache)
+
+        def with_shared(x):
+            c = {"k": attn_caches["k"][inv], "v": attn_caches["v"][inv],
+                 "pos": caches["pos"]}
+            y, _, nc = attn_block(shared_params, cfg, x, positions, c)
+            return y, nc["k"], nc["v"]
+
+        def without(x):
+            return (x, attn_caches["k"][inv], attn_caches["v"][inv])
+
+        x, nk, nv = jax.lax.cond(is_shared > 0, with_shared, without, x)
+        return (x, inv + (is_shared > 0).astype(jnp.int32)), (new_ssm, nk, nv, inv)
+
+    (x, _), (new_ssm, nks, nvs, invs) = jax.lax.scan(
+        body, (x, jnp.int32(0)),
+        (params["ssm_blocks"], ssm_caches, shared_after))
+    # scatter updated shared caches back by invocation index
+    sel = shared_after > 0
+    new_attn = {
+        "k": _scatter_shared(attn_caches["k"], nks, invs, sel),
+        "v": _scatter_shared(attn_caches["v"], nvs, invs, sel),
+    }
+    return x, aux, {"ssm": new_ssm, "shared_attn": new_attn}
+
+
+def _scatter_shared(orig, updates, invs, sel):
+    """orig: (I, ...); updates: (L, ...) per ssm layer; keep updates where the
+    layer ran the shared block."""
+    def upd(acc, item):
+        u, inv, s = item
+        acc = jax.lax.cond(s, lambda a: a.at[inv].set(u), lambda a: a, acc)
+        return acc, None
+
+    acc, _ = jax.lax.scan(upd, orig, (updates, invs, sel))
+    return acc
+
+
+def prime_encdec_caches(params, cfg: ModelConfig, batch, caches):
+    """Serving-time priming for enc-dec models: run the encoder once and
+    precompute every decoder layer's cross-attention K/V into the cache."""
+    enc = _encode(params, cfg, batch, None)
+    caches = dict(caches)
+    caches["encoder_out"] = enc
+    if cfg.cross_kv_cache:
+        dt = _dt(cfg)
+
+        def kv_of(xattn):
+            k = jnp.einsum("btd,dhk->bthk", enc, xattn["wk"].astype(dt))
+            v = jnp.einsum("btd,dhk->bthk", enc, xattn["wv"].astype(dt))
+            return k.astype(dt), v.astype(dt)
+
+        xk, xv = jax.vmap(kv_of)(params["blocks"]["xattn"])
+        layers = dict(caches["layers"])
+        layers["xk"], layers["xv"] = xk, xv
+        caches["layers"] = layers
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode caches (also used to allocate)."""
+    pattern = cfg.pattern()
+    out: dict = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        n = sum(k == "attn" for k in pattern)
+        if cfg.mla:
+            out["layers"] = {
+                "c": jax.ShapeDtypeStruct(
+                    (n, batch, max_seq, cfg.kv_lora_rank), dtype),
+                "k_rope": jax.ShapeDtypeStruct(
+                    (n, batch, max_seq, cfg.rope_head_dim), dtype),
+                "pos": jax.ShapeDtypeStruct((n,), jnp.int32),
+            }
+        else:
+            kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+            kv = jax.ShapeDtypeStruct(
+                (n, batch, max_seq, cfg.n_kv_heads, cfg.hd), kv_dt)
+            out["layers"] = {"k": kv, "v": kv,
+                             "pos": jax.ShapeDtypeStruct((n,), jnp.int32)}
+            if cfg.kv_cache_dtype == "int8":
+                sc = jax.ShapeDtypeStruct(
+                    (n, batch, max_seq, cfg.n_kv_heads), jnp.float32)
+                out["layers"]["k_scale"] = sc
+                out["layers"]["v_scale"] = sc
+        if cfg.enc_dec:
+            out["encoder_out"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_seq, cfg.d_model), dtype)
+            if cfg.cross_kv_cache:
+                xkv = jax.ShapeDtypeStruct(
+                    (n, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd),
+                    dtype)
+                out["layers"]["xk"] = xkv
+                out["layers"]["xv"] = xkv
+    elif cfg.family == "ssm":
+        n = sum(k == "ssm" for k in pattern)
+        shapes = ssm_cache_shape(cfg, batch)
+        out["layers"] = {
+            "conv": jax.ShapeDtypeStruct((n,) + shapes["conv"], dtype),
+            "state": jax.ShapeDtypeStruct((n,) + shapes["state"], jnp.float32),
+            "pos": jax.ShapeDtypeStruct((n,), jnp.int32),
+        }
+    elif cfg.family == "hybrid":
+        n = sum(k == "ssm" for k in pattern)
+        n_inv = sum(1 for i in range(n) if (i + 1) % 6 == 0)
+        shapes = ssm_cache_shape(cfg, batch)
+        out["ssm"] = {
+            "conv": jax.ShapeDtypeStruct((n,) + shapes["conv"], dtype),
+            "state": jax.ShapeDtypeStruct((n,) + shapes["state"], jnp.float32),
+            "pos": jax.ShapeDtypeStruct((n,), jnp.int32),
+        }
+        out["shared_attn"] = {
+            "k": jax.ShapeDtypeStruct(
+                (n_inv, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jax.ShapeDtypeStruct(
+                (n_inv, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    return out

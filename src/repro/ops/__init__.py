@@ -1,0 +1,9 @@
+"""Public bbop API — the SIMDRAM ISA surface (paper Table 1)."""
+from .bbops import (bbop_abs, bbop_add, bbop_and, bbop_bitcount, bbop_div,
+                    bbop_equal, bbop_greater, bbop_greater_equal,
+                    bbop_if_else, bbop_max, bbop_min, bbop_mul, bbop_or,
+                    bbop_relu, bbop_sub, bbop_xor, compile_bbop,
+                    planes_of, values_of)
+
+__all__ = [n for n in dir() if n.startswith("bbop") or n in
+           ("compile_bbop", "planes_of", "values_of")]

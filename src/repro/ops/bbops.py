@@ -1,0 +1,166 @@
+"""bbop_* — array-level SIMDRAM operations (paper Table 1 ISA extensions).
+
+Each ``bbop_<op>(dst ← srcs)`` mirrors one CPU ISA extension from the paper:
+the operand arrays are transposed to the vertical layout (the transposition
+unit, §5.1), the compiled μProgram for the operation is executed over the
+bit-planes (Step 3), and results are transposed back.  μPrograms are compiled
+once per (operation, element-width) and cached — exactly the paper's
+μProgram Memory/Scratchpad behavior.
+
+The execution backend is the trace-time unrolled engine
+(``repro.core.unrolled``): jit-compatible, shardable (the lane dimension is
+data-parallel), and differentiable-adjacent (integer ops; models use
+straight-through estimators where needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.circuits import compile_operation
+from ..core.unrolled import run_unrolled
+from ..core.uprogram import UProgram
+from ..simdram.layout import LANE_WORD, from_bitplanes, to_bitplanes
+
+
+@functools.lru_cache(maxsize=None)
+def compile_bbop(name: str, n_bits: int, optimize: bool = True) -> UProgram:
+    """The μProgram Scratchpad: compile once, reuse (paper Fig. 7)."""
+    return compile_operation(name, n_bits, optimize=optimize)
+
+
+def planes_of(x: jax.Array, n_bits: int) -> tuple[jax.Array, int]:
+    """Pad to a lane multiple of 32 and transpose to bit-planes."""
+    (e,) = x.shape
+    pad = (-e) % LANE_WORD
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return to_bitplanes(x, n_bits), e
+
+
+def values_of(planes: jax.Array, n: int, signed: bool = False) -> jax.Array:
+    return from_bitplanes(planes, signed=signed)[:n]
+
+
+def _binary(name: str, a: jax.Array, b: jax.Array, n_bits: int,
+            signed_out: bool = False, out_bits: int | None = None,
+            optimize: bool = True) -> jax.Array:
+    pa, n = planes_of(a, n_bits)
+    pb, _ = planes_of(b, n_bits)
+    prog = compile_bbop(name, n_bits, optimize)
+    outs = run_unrolled(prog, {"a": pa, "b": pb},
+                        out_bits={prog.outputs[0]: out_bits} if out_bits else None)
+    return values_of(outs[prog.outputs[0]], n, signed_out)
+
+
+def _unary(name: str, a: jax.Array, n_bits: int, out_bits: int | None = None,
+           optimize: bool = True) -> jax.Array:
+    pa, n = planes_of(a, n_bits)
+    prog = compile_bbop(name, n_bits, optimize)
+    outs = run_unrolled(prog, {"a": pa},
+                        out_bits={prog.outputs[0]: out_bits} if out_bits else None)
+    return values_of(outs[prog.outputs[0]], n)
+
+
+def _flip_msb(x: jax.Array, n_bits: int) -> jax.Array:
+    return x ^ (1 << (n_bits - 1))
+
+
+# -- 2-input operations (bbop_op dst, src_1, src_2, size, n) -----------------
+
+def bbop_add(a, b, n_bits: int = 8, **kw):
+    return _binary("addition", a, b, n_bits, **kw)
+
+
+def bbop_sub(a, b, n_bits: int = 8, **kw):
+    return _binary("subtraction", a, b, n_bits, **kw)
+
+
+def bbop_mul(a, b, n_bits: int = 8, **kw):
+    return _binary("multiplication", a, b, n_bits, **kw)
+
+
+def bbop_div(a, b, n_bits: int = 8, **kw):
+    return _binary("division", a, b, n_bits, **kw)
+
+
+def bbop_greater(a, b, n_bits: int = 8, signed: bool = False, **kw):
+    if signed:
+        a, b = _flip_msb(a, n_bits), _flip_msb(b, n_bits)
+    return _binary("greater", a, b, n_bits, out_bits=1, **kw)
+
+
+def bbop_greater_equal(a, b, n_bits: int = 8, signed: bool = False, **kw):
+    if signed:
+        a, b = _flip_msb(a, n_bits), _flip_msb(b, n_bits)
+    return _binary("greater_equal", a, b, n_bits, out_bits=1, **kw)
+
+
+def bbop_equal(a, b, n_bits: int = 8, **kw):
+    return _binary("equal", a, b, n_bits, out_bits=1, **kw)
+
+
+def bbop_max(a, b, n_bits: int = 8, signed: bool = False, **kw):
+    if signed:
+        sel = bbop_greater(a, b, n_bits, signed=True, **kw)
+        return bbop_if_else(sel, a, b, n_bits, **kw)
+    return _binary("maximum", a, b, n_bits, **kw)
+
+
+def bbop_min(a, b, n_bits: int = 8, signed: bool = False, **kw):
+    if signed:
+        sel = bbop_greater(b, a, n_bits, signed=True, **kw)
+        return bbop_if_else(sel, a, b, n_bits, **kw)
+    return _binary("minimum", a, b, n_bits, **kw)
+
+
+# -- 1-input operations -------------------------------------------------------
+
+def bbop_relu(a, n_bits: int = 8, **kw):
+    return _unary("relu", a, n_bits, **kw)
+
+
+def bbop_abs(a, n_bits: int = 8, **kw):
+    return _unary("abs", a, n_bits, **kw)
+
+
+def bbop_bitcount(a, n_bits: int = 8, **kw):
+    return _unary("bitcount", a, n_bits, out_bits=n_bits.bit_length(), **kw)
+
+
+# -- N-input reductions (paper: Y = src(1) ∘ src(2) ∘ src(3)) ----------------
+
+def _reduction(name: str, srcs, n_bits: int, optimize: bool = True):
+    assert len(srcs) == 3, "the compiled reduction μPrograms are 3-input"
+    planes = {}
+    n = None
+    for k, s in enumerate(srcs):
+        planes[f"s{k}"], n = planes_of(s, n_bits)
+    prog = compile_bbop(name, n_bits, optimize)
+    outs = run_unrolled(prog, planes)
+    return values_of(outs[prog.outputs[0]], n)
+
+
+def bbop_and(srcs, n_bits: int = 8, **kw):
+    return _reduction("and_reduction", srcs, n_bits, **kw)
+
+
+def bbop_or(srcs, n_bits: int = 8, **kw):
+    return _reduction("or_reduction", srcs, n_bits, **kw)
+
+
+def bbop_xor(srcs, n_bits: int = 8, **kw):
+    return _reduction("xor_reduction", srcs, n_bits, **kw)
+
+
+# -- predication (bbop_if_else dst, src_1, src_2, select, size, n) ------------
+
+def bbop_if_else(sel, a, b, n_bits: int = 8, optimize: bool = True):
+    pa, n = planes_of(a, n_bits)
+    pb, _ = planes_of(b, n_bits)
+    ps, _ = planes_of(sel.astype(jnp.uint32), 1)
+    prog = compile_bbop("if_else", n_bits, optimize)
+    outs = run_unrolled(prog, {"a": pa, "b": pb, "sel": ps})
+    return values_of(outs[prog.outputs[0]], n)

@@ -1,0 +1,1 @@
+"""Serving: prefill + batched single-token decode with sharded KV caches."""

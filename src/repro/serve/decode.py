@@ -1,0 +1,57 @@
+"""Serving steps: prefill (cache-populating) and batched one-token decode.
+
+``make_serve_step`` builds the function that the decode dry-run cells lower:
+one new token per sequence against a KV cache of ``max_seq`` (the assigned
+``decode_32k`` / ``long_500k`` shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.transformer import forward, init_cache_shapes
+
+
+def make_prefill(cfg: ModelConfig):
+    """Multi-token forward that also populates the decode caches."""
+    def prefill(params, batch, caches):
+        logits, _, new_caches = forward(params, cfg, batch, caches)
+        return logits[:, -1:], new_caches
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, caches, tokens (B,1)) → (logits, caches)."""
+    def serve_step(params, caches, batch):
+        logits, _, new_caches = forward(params, cfg, batch, caches)
+        return logits, new_caches
+    return serve_step
+
+
+def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
+                  max_seq: int | None = None, extra_batch: dict | None = None):
+    """e2e greedy decoding loop (examples/tests; single host)."""
+    b, s = prompt.shape
+    max_seq = max_seq or (s + steps)
+    cache_sds = init_cache_shapes(cfg, b, max_seq)
+    caches = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), cache_sds)
+    extra = extra_batch or {}
+    if cfg.enc_dec and "encoder_frames" in extra:
+        from ..models.transformer import prime_encdec_caches
+        caches = prime_encdec_caches(params, cfg, extra, caches)
+    prefill = make_prefill(cfg)
+    step = jax.jit(make_serve_step(cfg))
+    batch = {"tokens": prompt, **extra}
+    if cfg.rope == "mrope" and "mrope_positions" not in batch:
+        batch["mrope_positions"] = jnp.tile(
+            jnp.arange(s)[None, :, None], (b, 1, 3))
+    logits, caches = jax.jit(prefill)(params, batch, caches)
+    out = [jnp.argmax(logits[:, -1], -1)]
+    for t in range(steps - 1):
+        db = {"tokens": out[-1][:, None], **extra}
+        if cfg.rope == "mrope":
+            db["mrope_positions"] = jnp.full((b, 1, 3), s + t, jnp.int32)
+        logits, caches = step(params, caches, db)
+        out.append(jnp.argmax(logits[:, -1], -1))
+    return jnp.stack(out, 1)

@@ -1,0 +1,3 @@
+"""SIMDRAM substrate: DRAM timing/energy model, reliability Monte-Carlo,
+vertical-layout transposition, control unit, data-movement model, and the
+Ambit baseline."""

@@ -1,0 +1,79 @@
+"""Vertical ⇄ horizontal data layout (paper §3.3, §5.1) — JAX side.
+
+The transposition unit of the paper converts between the CPU's horizontal
+layout and SIMDRAM's vertical (bit-plane) layout.  On TPU the same conversion
+feeds the bit-plane engine: a horizontally-laid-out integer tensor becomes
+``uint32[n_bits, lanes/32]`` where plane *i*, lane *j* holds bit *i* of
+element *j*.
+
+These are the pure-jnp reference implementations; the Pallas kernel in
+``repro.kernels.bitplane_transpose`` is the production path and is verified
+against these in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE_WORD = 32  # lanes packed per uint32 word
+
+
+def to_bitplanes(values: jax.Array, n_bits: int) -> jax.Array:
+    """int array (E,) → uint32[n_bits, E/32] vertical bit-planes.
+
+    E must be a multiple of 32.  Element j's bit i lands in plane i, word
+    j//32, bit j%32.
+    """
+    (e,) = values.shape
+    assert e % LANE_WORD == 0, "lane count must be a multiple of 32"
+    u = values.astype(jnp.uint32)
+    bits = (u[None, :] >> jnp.arange(n_bits, dtype=jnp.uint32)[:, None]) & 1
+    bits = bits.reshape(n_bits, e // LANE_WORD, LANE_WORD)
+    shifts = jnp.arange(LANE_WORD, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def from_bitplanes(planes: jax.Array, signed: bool = False,
+                   dtype=jnp.int32) -> jax.Array:
+    """uint32[n_bits, W] → int array (32·W,)."""
+    n_bits, w = planes.shape
+    shifts = jnp.arange(LANE_WORD, dtype=jnp.uint32)
+    bits = (planes[:, :, None] >> shifts) & 1          # (n_bits, W, 32)
+    bits = bits.reshape(n_bits, w * LANE_WORD)
+    weights = (jnp.uint32(1) << jnp.arange(n_bits, dtype=jnp.uint32))
+    val = (bits.astype(jnp.uint32) * weights[:, None]).sum(0, dtype=jnp.uint32)
+    if signed and n_bits < 32:
+        sign = (val >> np.uint32(n_bits - 1)) & 1
+        val = val.astype(dtype) - (sign << n_bits).astype(dtype)
+        return val
+    return val.astype(dtype)
+
+
+def pack_mask(mask: jax.Array) -> jax.Array:
+    """bool (E,) → uint32[E/32] single packed plane."""
+    return to_bitplanes(mask.astype(jnp.uint32), 1)[0]
+
+
+def unpack_mask(plane: jax.Array) -> jax.Array:
+    (w,) = plane.shape
+    shifts = jnp.arange(LANE_WORD, dtype=jnp.uint32)
+    return (((plane[:, None] >> shifts) & 1) != 0).reshape(w * LANE_WORD)
+
+
+# -- numpy twin used by the reference executor tests -------------------------
+
+def np_to_bitplanes(values: np.ndarray, n_bits: int) -> np.ndarray:
+    e = values.shape[0]
+    assert e % LANE_WORD == 0
+    u = values.astype(np.uint32)
+    bits = (u[None, :] >> np.arange(n_bits, dtype=np.uint32)[:, None]) & 1
+    bits = bits.reshape(n_bits, e // LANE_WORD, LANE_WORD)
+    return (bits << np.arange(LANE_WORD, dtype=np.uint32)).sum(-1).astype(np.uint32)
+
+
+def np_from_bitplanes(planes: np.ndarray) -> np.ndarray:
+    n_bits, w = planes.shape
+    shifts = np.arange(LANE_WORD, dtype=np.uint32)
+    bits = ((planes[:, :, None] >> shifts) & 1).reshape(n_bits, w * LANE_WORD)
+    return (bits.astype(np.uint64) << np.arange(n_bits, dtype=np.uint64)[:, None]).sum(0)

@@ -1,0 +1,162 @@
+"""DRAM timing, throughput and energy model (paper §6, §7.1, §7.2).
+
+The paper's methodology: an operation's latency is the sum of its AAP/AP
+command-sequence latencies under DDR4-2400 timing; throughput is
+``SIMD lanes × banks / latency``; energy follows the Micron power model with
+Ambit's observation that each additional simultaneously-activated row costs
++22% activation energy [131].
+
+Baselines (paper Table 2): the CPU (16-core Skylake, AVX-512, 4-channel
+DDR4-2400) and GPU (Titan V, HBM2) are modeled at their *memory-bandwidth
+roofline* for these streaming, memory-bound kernels — the paper itself
+classifies the target workloads as memory-bound, so the bandwidth roofline is
+the right analytic stand-in for measured hardware we do not have.  All
+constants are documented here and surfaced in benchmark output.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.uprogram import UProgram
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMTiming:
+    """DDR4-2400 (per paper Table 2)."""
+    tCK_ns: float = 0.833
+    tRCD_ns: float = 14.16
+    tRP_ns: float = 14.16
+    tRAS_ns: float = 32.0
+    row_bits: int = 8 * 1024 * 8          # 8 kB row = 65536 bitlines/SIMD lanes
+    banks_per_chip: int = 16
+
+    # command-sequence latencies (Ambit/RowClone command structure):
+    #   AP  = ACTIVATE(triple) → PRECHARGE                = tRAS + tRP
+    #   AAP = ACTIVATE → ACTIVATE → PRECHARGE             = 2·tRAS + tRP
+    @property
+    def t_ap_ns(self) -> float:
+        return self.tRAS_ns + self.tRP_ns
+
+    @property
+    def t_aap_ns(self) -> float:
+        return 2 * self.tRAS_ns + self.tRP_ns
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMEnergy:
+    """Activation energy per 8 kB row (derived from the Micron TN-41-01 power
+    model for DDR4-2400 x8: (IDD0−IDD3N)·tRC·VDD·devices_per_rank)."""
+    e_act_nj: float = 5.8          # one full-row ACTIVATE+PRECHARGE pair
+    tra_row_penalty: float = 0.22  # +22% per extra simultaneous row [131]
+    background_w: float = 0.15     # per-bank background/peripheral power
+
+    def e_ap_nj(self) -> float:
+        # triple-row activation: 1 + 2·22% of a single activation
+        return self.e_act_nj * (1 + 2 * self.tra_row_penalty)
+
+    def e_aap_nj(self) -> float:
+        return self.e_act_nj * 2   # two back-to-back activations
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineModel:
+    """Memory-bandwidth-roofline models for the CPU/GPU baselines."""
+    cpu_bw_gbs: float = 76.8       # 4 ch × DDR4-2400 (Table 2)
+    gpu_bw_gbs: float = 652.8      # Titan V HBM2
+    cpu_tdp_w: float = 165.0       # Skylake 16-core package
+    gpu_tdp_w: float = 250.0       # Titan V board power
+    # per-op stream profile: (input arrays, output arrays)
+    streams: dict = dataclasses.field(default_factory=lambda: dict(
+        default=(2, 1), relu=(1, 1), abs=(1, 1), bitcount=(1, 1),
+        and_reduction=(3, 1), or_reduction=(3, 1), xor_reduction=(3, 1),
+        if_else=(3, 1),
+    ))
+
+    def throughput_gops(self, op: str, n_bits: int, gpu: bool = False) -> float:
+        ins, outs = self.streams.get(op, self.streams["default"])
+        bytes_per_elem = (ins + outs) * (n_bits // 8)
+        bw = self.gpu_bw_gbs if gpu else self.cpu_bw_gbs
+        return bw / bytes_per_elem
+
+    def power_w(self, gpu: bool = False) -> float:
+        return self.gpu_tdp_w if gpu else self.cpu_tdp_w
+
+
+@dataclasses.dataclass(frozen=True)
+class MovementModel:
+    """In-DRAM data movement (paper §7.6): LISA for intra-bank inter-subarray
+    row copies, RowClone PSM for inter-bank copies over the internal bus."""
+    t_lisa_row_ns: float = 90.5          # LISA RBM hop (LISA paper, ~1.6 tRC)
+    t_psm_row_ns: float = 8 * 1024 / 8 * 0.833  # PSM: row serialized over bus
+
+    def intra_bank_ns(self, n_rows: int) -> float:
+        return n_rows * self.t_lisa_row_ns
+
+    def inter_bank_ns(self, n_rows: int) -> float:
+        return n_rows * self.t_psm_row_ns
+
+
+@dataclasses.dataclass(frozen=True)
+class TranspositionModel:
+    """Transposition-unit overhead (paper §5.1, §7.7): each 64 B cache line
+    transposes in one 4 GHz core cycle through the transpose buffer; the
+    critical path is the DRAM write of the first subarray's object slices
+    (later subarrays overlap with compute)."""
+    cacheline_bits: int = 512
+    t_buffer_ns: float = 0.25            # 1 cycle @ 4 GHz
+    dram_ch_bw_gbs: float = 19.2         # one DDR4-2400 channel
+
+    def first_subarray_ns(self, n_bits: int, lanes: int) -> float:
+        n_lines = n_bits * (lanes // self.cacheline_bits)
+        bytes_moved = n_lines * self.cacheline_bits / 8
+        return n_lines * self.t_buffer_ns + bytes_moved / self.dram_ch_bw_gbs
+
+
+class SimdramPerfModel:
+    """Throughput / energy for a compiled μProgram (the paper's Fig. 9/10)."""
+
+    def __init__(self, timing: DRAMTiming | None = None,
+                 energy: DRAMEnergy | None = None,
+                 baseline: BaselineModel | None = None) -> None:
+        self.timing = timing or DRAMTiming()
+        self.energy = energy or DRAMEnergy()
+        self.baseline = baseline or BaselineModel()
+
+    def latency_ns(self, prog: UProgram) -> float:
+        mix = prog.command_mix()
+        t = self.timing
+        return mix["AAP"] * t.t_aap_ns + mix["AP"] * t.t_ap_ns
+
+    def throughput_gops(self, prog: UProgram, banks: int = 1) -> float:
+        """Elements per second (×1e-9): one row of SIMD lanes per bank per
+        μProgram execution; banks operate in parallel (§6)."""
+        lanes = self.timing.row_bits
+        return lanes * banks / self.latency_ns(prog)
+
+    def energy_nj(self, prog: UProgram) -> float:
+        mix = prog.command_mix()
+        e = self.energy
+        # an AAP whose source activation is a TRA pays the TRA penalty too
+        extra_tra = mix["TRA"] - mix["AP"]
+        return (mix["AAP"] * e.e_aap_nj() + mix["AP"] * e.e_ap_nj()
+                + extra_tra * e.e_act_nj * 2 * e.tra_row_penalty)
+
+    def power_w(self, prog: UProgram, banks: int = 1) -> float:
+        return (self.energy_nj(prog) / self.latency_ns(prog)
+                + self.energy.background_w) * banks
+
+    def throughput_per_watt(self, prog: UProgram, banks: int = 1) -> float:
+        return self.throughput_gops(prog, banks) / self.power_w(prog, banks)
+
+    # -- baselines ----------------------------------------------------------
+    def cpu_gops(self, op: str, n_bits: int) -> float:
+        return self.baseline.throughput_gops(op, n_bits, gpu=False)
+
+    def gpu_gops(self, op: str, n_bits: int) -> float:
+        return self.baseline.throughput_gops(op, n_bits, gpu=True)
+
+    def cpu_gops_per_watt(self, op: str, n_bits: int) -> float:
+        return self.cpu_gops(op, n_bits) / self.baseline.power_w(False)
+
+    def gpu_gops_per_watt(self, op: str, n_bits: int) -> float:
+        return self.gpu_gops(op, n_bits) / self.baseline.power_w(True)

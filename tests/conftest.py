@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see exactly
+one CPU device; only the dry-run forces 512 host devices (in its own
+process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def oracle_inputs(rng, n_bits, n=96):
+    hi = min(2 ** n_bits, 2 ** 62)
+    a = rng.integers(0, hi, n).astype(np.int64)
+    b = rng.integers(0, hi, n).astype(np.int64)
+    return a, b

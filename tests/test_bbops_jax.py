@@ -1,0 +1,51 @@
+"""bbop public API under jit (Table 1 ISA surface)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ops import (bbop_abs, bbop_add, bbop_bitcount, bbop_div,
+                       bbop_equal, bbop_greater, bbop_if_else, bbop_max,
+                       bbop_mul, bbop_relu, bbop_sub, bbop_xor)
+
+RNG = np.random.default_rng(3)
+N = 100
+A = jnp.array(RNG.integers(0, 256, N), jnp.int32)
+B = jnp.array(RNG.integers(0, 256, N), jnp.int32)
+An, Bn = np.asarray(A), np.asarray(B)
+
+
+@pytest.mark.parametrize("fn,exp", [
+    (lambda: bbop_add(A, B, 8), (An + Bn) & 255),
+    (lambda: bbop_sub(A, B, 8), (An - Bn) & 255),
+    (lambda: bbop_mul(A, B, 8), (An * Bn) & 255),
+    (lambda: bbop_div(A, jnp.maximum(B, 1), 8), An // np.maximum(Bn, 1)),
+    (lambda: bbop_greater(A, B, 8), (An > Bn).astype(np.int32)),
+    (lambda: bbop_greater(A, B, 8, signed=True),
+     (An.astype(np.int8) > Bn.astype(np.int8)).astype(np.int32)),
+    (lambda: bbop_equal(A, B, 8), (An == Bn).astype(np.int32)),
+    (lambda: bbop_relu(A, 8), np.where(An.astype(np.int8) >= 0, An, 0)),
+    (lambda: bbop_abs(A, 8), np.abs(An.astype(np.int8).astype(int)) & 255),
+    (lambda: bbop_max(A, B, 8), np.maximum(An, Bn)),
+    (lambda: bbop_bitcount(A, 8),
+     np.array([bin(x).count("1") for x in An.tolist()])),
+    (lambda: bbop_xor([A, B, A], 8), An ^ Bn ^ An),
+])
+def test_bbop(fn, exp):
+    np.testing.assert_array_equal(np.asarray(fn()), exp)
+
+
+def test_bbop_under_jit_and_vmap_lanes():
+    f = jax.jit(lambda x, y: bbop_add(x, y, 8))
+    np.testing.assert_array_equal(np.asarray(f(A, B)), (An + Bn) & 255)
+
+
+def test_predication_example_from_paper_listing1():
+    """Paper Listing 1: C = (A > pred) ? A+B : A−B."""
+    pred = jnp.array(RNG.integers(0, 256, N), jnp.int32)
+    d = bbop_add(A, B, 8)
+    e = bbop_sub(A, B, 8)
+    f = bbop_greater(A, pred, 8)
+    c = bbop_if_else(f, d, e, 8)
+    exp = np.where(An > np.asarray(pred), (An + Bn) & 255, (An - Bn) & 255)
+    np.testing.assert_array_equal(np.asarray(c), exp)

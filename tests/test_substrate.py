@@ -1,0 +1,76 @@
+"""Substrate models: timing/energy, reliability Monte-Carlo, layout."""
+import numpy as np
+import pytest
+
+from repro.core.circuits import compile_operation
+from repro.simdram.reliability import (NODES, qra_margin_collapsed,
+                                       reliability_table,
+                                       simulate_multi_row_activation)
+from repro.simdram.timing import (BaselineModel, DRAMTiming, SimdramPerfModel)
+
+
+def test_throughput_scales_with_banks():
+    m = SimdramPerfModel()
+    p = compile_operation("addition", 32)
+    t1 = m.throughput_gops(p, banks=1)
+    t16 = m.throughput_gops(p, banks=16)
+    assert abs(t16 / t1 - 16) < 1e-9
+
+
+def test_simdram_beats_ambit_on_throughput():
+    """Paper: 2.0× average over 16 ops at one bank."""
+    m = SimdramPerfModel()
+    s = m.throughput_gops(compile_operation("addition", 32))
+    a = m.throughput_gops(compile_operation("addition", 32, optimize=False))
+    assert s / a > 1.8
+
+
+def test_energy_efficiency_ordering():
+    """Paper Fig. 10: SIMDRAM > Ambit on Throughput/Watt."""
+    m = SimdramPerfModel()
+    s = m.throughput_per_watt(compile_operation("addition", 32))
+    a = m.throughput_per_watt(compile_operation("addition", 32,
+                                                optimize=False))
+    assert s > a
+
+
+def test_throughput_drops_with_element_size():
+    """Paper Fig. 9 right: larger elements → lower throughput."""
+    m = SimdramPerfModel()
+    ts = [m.throughput_gops(compile_operation("addition", n))
+          for n in (8, 16, 32, 64)]
+    assert ts == sorted(ts, reverse=True)
+
+
+def test_tra_reliable_at_low_variation():
+    """Paper Table 3: TRA has zero failures at ≤5% variation, all nodes."""
+    for node in NODES.values():
+        assert simulate_multi_row_activation(node, 3, 0.05, 4000) == 0.0
+
+
+def test_qra_worse_than_tra():
+    node = NODES["32nm"]
+    tra = simulate_multi_row_activation(node, 3, 0.20, 4000)
+    qra = simulate_multi_row_activation(node, 5, 0.20, 4000)
+    assert qra > tra
+
+
+def test_qra_collapses_at_22nm():
+    """Paper: 'QRA does not perform correctly in the projected 22nm DRAM'."""
+    assert qra_margin_collapsed(NODES["22nm"])
+    assert not qra_margin_collapsed(NODES["45nm"])
+
+
+def test_failure_rate_grows_with_scaling():
+    rates = [simulate_multi_row_activation(NODES[n], 3, 0.20, 6000)
+             for n in ("45nm", "32nm", "22nm")]
+    assert rates[0] <= rates[1] <= rates[2] + 0.01
+
+
+def test_jnp_layout_roundtrip():
+    import jax.numpy as jnp
+    from repro.simdram.layout import from_bitplanes, to_bitplanes
+    x = jnp.arange(256, dtype=jnp.int32) * 7 % 61
+    planes = to_bitplanes(x, 8)
+    back = from_bitplanes(planes)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))

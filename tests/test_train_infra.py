@@ -1,0 +1,138 @@
+"""Training infrastructure: optimizer, microbatching, checkpoint/restore,
+failover, straggler monitoring."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.failover import (FailoverConfig, FailoverRunner,
+                                        StragglerMonitor)
+from repro.models.params import init_params
+from repro.models.transformer import model_defs
+from repro.train.data import DataConfig, synthetic_batch
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+CFG = get_reduced("qwen1_5_0_5b")
+
+
+def _state(seed=0, compressed=False):
+    params = init_params(model_defs(CFG), jax.random.key(seed))
+    return init_train_state(params, compressed=compressed)
+
+
+def _batch(step=0, b=4, s=64):
+    d = DataConfig(vocab=CFG.vocab, seq_len=s, global_batch=b)
+    return synthetic_batch(d, step)
+
+
+def test_loss_decreases_over_steps():
+    state = _state()
+    step = jax.jit(make_train_step(CFG, AdamWConfig(lr=3e-3)))
+    first = last = None
+    for s in range(20):
+        state, m = step(state, _batch(s))
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """Accumulated microbatch gradients equal the full-batch gradient (up to
+    bf16 reduction-order noise)."""
+    import dataclasses
+    from repro.models.params import init_params as _ip
+    from repro.train.train_step import make_loss_fn
+    cfg32 = dataclasses.replace(CFG, compute_dtype="float32")
+    state = init_train_state(_ip(model_defs(cfg32), jax.random.key(0)))
+    loss_fn = make_loss_fn(cfg32)
+    grad = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))
+    b = _batch(0, b=8)
+    g_full = grad(state.params, b)
+    half1 = jax.tree.map(lambda x: x[:4], b)
+    half2 = jax.tree.map(lambda x: x[4:], b)
+    g_acc = jax.tree.map(lambda x, y: (x + y) / 2,
+                         grad(state.params, half1),
+                         grad(state.params, half2))
+    for a, c in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, state, blocking=True)
+    assert mgr.latest_step() == 7
+    restored = mgr.restore(7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_atomicity(tmp_path):
+    state = _state()
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, blocking=True)
+    assert mgr.steps() == [3, 4]
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+def test_failover_restores_after_persistent_failure(tmp_path):
+    state = _state()
+    opt = AdamWConfig(lr=1e-3)
+    raw_step = jax.jit(make_train_step(CFG, opt))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, state, blocking=True)
+    boom = {"armed": True}
+
+    def injector(step):
+        if step == 3 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    runner = FailoverRunner(raw_step, mgr,
+                            FailoverConfig(checkpoint_every=2, max_retries=0),
+                            failure_injector=injector)
+    final, hist = runner.run(state, lambda s: _batch(s), 0, 6)
+    assert any("restored" in e for e in runner.events)
+    assert int(final.opt.step) >= 6
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(factor=3.0)
+    for i in range(10):
+        mon.record(i, 0.1)
+    assert mon.record(10, 1.0)
+    assert mon.flagged and mon.flagged[0][0] == 10
+
+
+def test_data_pipeline_determinism_and_sharding():
+    d = DataConfig(vocab=1000, seq_len=32, global_batch=8)
+    b1 = synthetic_batch(d, 5)
+    b2 = synthetic_batch(d, 5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    half = synthetic_batch(d, 5, lo=4, hi=8)
+    np.testing.assert_array_equal(np.asarray(half["tokens"]),
+                                  np.asarray(b1["tokens"][4:8]))
+    assert not np.array_equal(np.asarray(synthetic_batch(d, 6)["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_majority_vote_compression_math():
+    """Packed sign majority == elementwise sign-of-sum (SIMDRAM TRA lifted
+    to gradient aggregation)."""
+    import jax.numpy as jnp
+    from repro.train.train_step import _majority_from_packed, _pack_signs
+    rng = np.random.default_rng(0)
+    grads = rng.normal(size=(5, 130)).astype(np.float32)
+    packed = jnp.stack([_pack_signs(jnp.asarray(g)) for g in grads])
+    maj = _majority_from_packed(packed, 5, 130)
+    votes = (grads >= 0).sum(0)
+    exp = np.where(2 * votes > 5, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(maj), exp)
