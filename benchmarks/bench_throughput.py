@@ -1,14 +1,93 @@
 """Paper Fig. 9: throughput of the 16 operations — SIMDRAM:1/4/16 vs the
-CPU/GPU bandwidth-roofline baselines and the Ambit baseline."""
+CPU/GPU bandwidth-roofline baselines and the Ambit baseline — plus the
+*measured* section: wall-clock of the executable backends (unrolled /
+pallas-interpret / reference oracle), fused plane-resident pipelines vs the
+per-op transpose round-trip, and the multi-bank batch axis."""
 from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.circuits import ALL_OPS, compile_operation
 from repro.simdram.timing import SimdramPerfModel
 
-from .common import row
+from .common import row, timed
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# Measured: backends × fusion × banks
+# ---------------------------------------------------------------------------
+
+def _block(x):
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, x)
+    return x
+
+
+def measured(smoke: bool = False) -> None:
+    from repro.ops import (bbop_add, bbop_mul, bbop_relu, simdram_pipeline)
+    from repro.simdram.layout import reset_transpose_stats, transpose_counts
+
+    n = 1024 if smoke else 8192
+    banks_list = (1, 4) if smoke else (1, 16)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+    c = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+
+    # per-backend single-op wall clock (8-bit add)
+    backends = ("unrolled", "pallas") if smoke else \
+        ("unrolled", "pallas", "reference")
+    for be in backends:
+        _, us = timed(lambda: _block(bbop_add(a, b, 8, backend=be)),
+                      repeat=2 if smoke else 3)
+        row(f"measured/backend/{be}/add8/n{n}", us,
+            f"melems_per_s={n / us:.2f}")
+
+    # fused chain vs per-op transposes: relu(add(mul(a, b), c))
+    def unfused():
+        return _block(bbop_relu(bbop_add(bbop_mul(a, b, 8), c, 8), 8))
+
+    def fused():
+        with simdram_pipeline() as p:
+            pa, pb, pc = p.load([a, b, c], 8)
+            return _block(p.store(
+                bbop_relu(bbop_add(bbop_mul(pa, pb, 8), pc, 8), 8)))
+
+    reset_transpose_stats()
+    unfused()
+    t_un = sum(transpose_counts())
+    reset_transpose_stats()
+    fused()
+    t_fu = sum(transpose_counts())
+    _, us_un = timed(unfused, repeat=2 if smoke else 3)
+    _, us_fu = timed(fused, repeat=2 if smoke else 3)
+    row(f"measured/unfused/chain3/n{n}", us_un,
+        f"transposes_per_call={t_un}")
+    row(f"measured/fused/chain3/n{n}", us_fu,
+        f"transposes_per_call={t_fu} speedup={us_un / us_fu:.2f}x")
+
+    # multi-bank batch axis (the paper's 16-bank scaling, vmapped)
+    for banks in banks_list:
+        ab = jnp.asarray(rng.integers(0, 256, (banks, n)), jnp.int32)
+        bb = jnp.asarray(rng.integers(0, 256, (banks, n)), jnp.int32)
+
+        def banked():
+            with simdram_pipeline(banks=banks) as p:
+                pa, pb = p.load([ab, bb], 8)
+                return _block(p.store(bbop_add(pa, pb, 8)))
+
+        _, us = timed(banked, repeat=2 if smoke else 3)
+        row(f"measured/banked/add8/banks{banks}/n{n}", us,
+            f"melems_per_s={banks * n / us:.2f}")
+
+
+def main(smoke: bool = False) -> None:
+    measured(smoke=smoke)
+    if smoke:
+        return
     m = SimdramPerfModel()
     print("# Fig. 9 — GOps/s (32-bit elements)")
     sums = {k: 0.0 for k in ("s1", "s4", "s16", "cpu", "gpu", "ambit")}

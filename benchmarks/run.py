@@ -29,16 +29,29 @@ BENCHES = {
 }
 
 
+# fast subset run nightly by CI before the full suite; each main() that
+# accepts ``smoke=True`` shrinks its problem sizes
+SMOKE = ("table5", "fig9", "fig14")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset with reduced problem sizes")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+    names = (args.only.split(",") if args.only
+             else list(SMOKE) if args.smoke else list(BENCHES))
     failed = []
     for name in names:
         print(f"\n==== {name} ====", flush=True)
         try:
-            BENCHES[name]()
+            import inspect
+            fn = BENCHES[name]
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=True)
+            else:
+                fn()
         except Exception:    # noqa: BLE001 — report and continue
             traceback.print_exc()
             failed.append(name)

@@ -1,0 +1,157 @@
+"""Pluggable μProgram execution backends (the Step-3 seam).
+
+Every backend consumes the same compiled :class:`~repro.core.uprogram.UProgram`
+and the same plane-level operand format — ``name → uint32[n_bits, W]`` bit
+planes (optionally ``uint32[banks, n_bits, W]`` for the paper's multi-bank
+scaling) — and returns output planes.  Registered backends:
+
+* ``reference`` — the faithful numpy :class:`~repro.core.executor.Subarray`
+  model: exact AAP/AP semantics, destructive TRAs, DCC ports.  The oracle.
+* ``unrolled``  — trace-time unrolled jnp dataflow
+  (:func:`repro.core.unrolled.run_unrolled`): copies vanish, constants fold;
+  the TPU-native fast path.  jit/vmap/shard-compatible.
+* ``pallas``    — the Fig.-7 control-unit FSM as a Pallas kernel
+  (:func:`repro.kernels.ops.run_uprogram_kernel`): encoded AAP/AP command
+  stream driving a VMEM row file.  ``interpret=True`` runs it on CPU; on a
+  real TPU the same kernel is the explicitly-tiled memory-traffic path.
+
+New substrates (real-DRAM timing models, GPU bit-slice engines, …) plug in
+with :func:`register_backend` and are immediately usable from every
+``bbop_*`` and from :class:`~repro.ops.bbops.simdram_pipeline` via
+``backend="name"``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .uprogram import UProgram
+
+# backend: (prog, operands: dict[str, uint32[n_bits, W]], out_bits) → outputs
+BackendFn = Callable[..., dict]
+
+_REGISTRY: dict[str, BackendFn] = {}
+_DEFAULT = "unrolled"
+
+
+def register_backend(name: str, fn: BackendFn) -> None:
+    _REGISTRY[name] = fn
+
+
+def list_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str | None = None) -> BackendFn:
+    key = name or _DEFAULT
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise KeyError(f"unknown backend {key!r}; registered: "
+                       f"{list_backends()}") from None
+
+
+def default_backend() -> str:
+    return _DEFAULT
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{list_backends()}")
+    _DEFAULT = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped default-backend override: ``with use_backend("pallas"): ...``"""
+    global _DEFAULT
+    prev = _DEFAULT
+    set_default_backend(name)
+    try:
+        yield
+    finally:
+        _DEFAULT = prev
+
+
+def execute_program(prog: UProgram, operands: dict, out_bits=None,
+                    backend: str | None = None) -> dict:
+    """Dispatch a μProgram to a backend; banked operands vmap over banks.
+
+    ``operands``: name → uint32[n_bits, W] or uint32[banks, n_bits, W];
+    all operands must agree on bankedness.  Returns planes with a matching
+    leading bank axis when the inputs were banked.
+    """
+    fn = get_backend(backend)
+    first = next(iter(operands.values()))
+    if first.ndim == 3:          # bank axis: one subarray per bank
+        if any(v.ndim != 3 for v in operands.values()):
+            raise ValueError("banked execution needs every operand banked")
+        if not getattr(fn, "jax_traceable", True):
+            # non-traceable backends (numpy oracle) iterate banks instead
+            banks = first.shape[0]
+            per = [fn(prog, {k: v[i] for k, v in operands.items()},
+                      out_bits=out_bits) for i in range(banks)]
+            return {k: jnp.stack([p[k] for p in per]) for k in per[0]}
+        return jax.vmap(lambda ops: fn(prog, ops, out_bits=out_bits)
+                        )(operands)
+    return fn(prog, operands, out_bits=out_bits)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _unrolled_execute(prog: UProgram, operands: dict, out_bits=None) -> dict:
+    from .unrolled import run_unrolled
+    return run_unrolled(prog, operands, out_bits=out_bits)
+
+
+def _pallas_execute(prog: UProgram, operands: dict, out_bits=None) -> dict:
+    from ..kernels.ops import run_uprogram_kernel
+    interpret = jax.default_backend() != "tpu"
+    return run_uprogram_kernel(prog, operands, out_bits=out_bits,
+                               interpret=interpret)
+
+
+def _reference_execute(prog: UProgram, operands: dict, out_bits=None) -> dict:
+    """Planes → horizontal numpy values → faithful Subarray run → planes.
+
+    Conversions use the numpy layout twins (not the jnp transposition-unit
+    path) so reference execution never perturbs TRANSPOSE_STATS.
+    """
+    from ..core.executor import from_planes, run_program
+    from ..simdram.layout import LANE_WORD, np_from_bitplanes, np_to_bitplanes
+
+    vals = {}
+    lanes = None
+    for name, planes in operands.items():
+        p = np.asarray(planes)
+        lanes = p.shape[1] * LANE_WORD
+        vals[name] = np_from_bitplanes(p).astype(np.int64)
+    # the Subarray packs 64 lanes per word — round the lane count up
+    run_lanes = ((lanes + 63) // 64) * 64
+    if run_lanes != lanes:
+        vals = {k: np.pad(v, (0, run_lanes - lanes)) for k, v in vals.items()}
+    outs, _ = run_program(prog, vals, lanes=run_lanes, out_bits=out_bits)
+    out_bits = out_bits or {}
+    result = {}
+    for name, planes64 in outs.items():
+        nb = out_bits.get(name, prog.n_bits)
+        horizontal = from_planes(planes64, run_lanes)[:lanes]
+        result[name] = jnp.asarray(
+            np_to_bitplanes(horizontal.astype(np.uint64), nb))
+    return result
+
+
+_reference_execute.jax_traceable = False
+
+register_backend("unrolled", _unrolled_execute)
+register_backend("pallas", _pallas_execute)
+register_backend("reference", _reference_execute)

@@ -1,0 +1,44 @@
+"""Version compatibility shims for the distributed layer.
+
+The repo targets both the modern ``jax.shard_map`` API (axis_names /
+check_vma) and the older ``jax.experimental.shard_map.shard_map`` API
+(auto / check_rep) that ships with jax 0.4.x.  ``shard_map_compat`` exposes
+the modern surface and lowers to whichever implementation is present.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, axis_names, in_specs, out_specs,
+                     check_vma: bool = False):
+    """``jax.shard_map`` with partial-manual axes, on any supported jax.
+
+    ``axis_names`` is the set of mesh axes the function is *manual* over;
+    remaining mesh axes stay under the automatic partitioner where the jax
+    version supports it.  jax 0.4.x partial-manual lowering is broken for
+    nontrivial bodies (XLA fatally aborts with ``Check failed:
+    sharding.IsManualSubgroup()`` on collectives and even plain model
+    forwards when an auto axis has size > 1), so on the legacy API we fall
+    back to fully-manual: the non-manual axes see replicated operands
+    (in_specs PS() ⇒ full arrays per device) and the body runs redundantly
+    across them.  Semantics are identical; tensor-parallel sharding inside
+    the mapped body is sacrificed on legacy jax only.
+    """
+    axis_names = frozenset(axis_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=axis_names,
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma, auto=frozenset())
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a per-device *list* of dicts on
+    jax 0.4.x and a plain dict on newer releases — normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from ..configs import ARCHS, get_config
 from ..configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from ..distributed.compat import cost_analysis_dict
 from ..distributed.sharding import (batch_shardings, cache_shardings,
                                     replicated, tree_shardings)
 from ..models.params import abstract_params
@@ -230,7 +231,7 @@ def _lower_with(cfg, arch: str, shape, mesh, shape_name: str) -> dict:
                           donate_argnums=(1,)
                           ).lower(p_sds, cache_sds, specs)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     return {"compiled": compiled,
             "flops_per_device": ca.get("flops", 0.0),
             "bytes_per_device": ca.get("bytes accessed", 0.0)}

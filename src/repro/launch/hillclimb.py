@@ -27,6 +27,7 @@ import json
 import jax
 
 from ..configs import get_config
+from ..distributed.compat import cost_analysis_dict, shard_map_compat
 from .dryrun import lower_cell
 
 CELLS = {
@@ -129,8 +130,9 @@ def lower_compressed_cell(arch: str, shape_name: str, cfg,
     step_inner, data_axes = make_compressed_train_step(
         cfg, AdamWConfig(), mesh, fused=fused, two_phase=two_phase)
     bspec = PS(data_axes if len(data_axes) > 1 else data_axes[0])
-    # manual over data axes only; 'model' stays auto → TP preserved
-    stepped = jax.shard_map(
+    # manual over data axes; 'model' stays auto (TP preserved) only on
+    # modern jax — shard_map_compat replicates it on jax 0.4.x
+    stepped = shard_map_compat(
         step_inner, mesh=mesh, axis_names=set(data_axes),
         in_specs=(jax.tree.map(lambda _: PS(), state_sds),
                   jax.tree.map(lambda _: bspec, specs)),
@@ -145,7 +147,7 @@ def lower_compressed_cell(arch: str, shape_name: str, cfg,
                       in_shardings=(st_shard, batch_shardings(mesh, specs))
                       ).lower(state_sds, specs)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     stats = {"arch": arch, "shape": shape_name,
              "mesh": "256x1-dp" if dp_only else "16x16",
              "n_devices": mesh.devices.size, "skipped": False,
@@ -177,7 +179,7 @@ def lower_dp_baseline(arch: str, shape_name: str, cfg) -> dict:
                                     batch_shardings(mesh, specs)),
                       donate_argnums=(0,)).lower(state_sds, specs)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     stats = {"arch": arch, "shape": shape_name, "mesh": "256x1-dp",
              "n_devices": 256, "skipped": False,
              "flops_per_device": ca.get("flops", 0.0),

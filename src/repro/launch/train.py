@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from ..configs import get_config, get_reduced
 from ..distributed.checkpoint import CheckpointManager
+from ..distributed.compat import shard_map_compat
 from ..distributed.failover import FailoverConfig, FailoverRunner
 from ..distributed.sharding import (batch_shardings, data_pspec, replicated,
                                     tree_shardings)
@@ -41,7 +42,7 @@ def build_mesh(n_model: int | None = None):
 
 
 def setup(cfg, mesh, opt_cfg: AdamWConfig, compressed: bool = False,
-          microbatches: int = 1, seed: int = 0):
+          microbatches: int = 1, seed: int = 0, exchange: str = "packed"):
     defs = model_defs(cfg)
     shardings = tree_shardings(defs, mesh)
     params = init_params(defs, jax.random.key(seed))
@@ -52,12 +53,14 @@ def setup(cfg, mesh, opt_cfg: AdamWConfig, compressed: bool = False,
         opt=AdamWState(step=replicated(mesh), m=shardings, v=shardings),
         error_fb=shardings if compressed else None)
     if compressed:
-        step_inner, data_axes = make_compressed_train_step(cfg, opt_cfg, mesh)
-        # manual over the data axes (explicit packed-sign collectives);
-        # the model axis stays auto so XLA keeps tensor parallelism
+        step_inner, data_axes = make_compressed_train_step(
+            cfg, opt_cfg, mesh, exchange=exchange)
+        # manual over the data axes (explicit packed-sign collectives); the
+        # model axis stays auto where the jax version supports partial-manual
+        # (shard_map_compat replicates it on legacy jax)
         pspec = PS()
         bspec = PS(data_axes if len(data_axes) > 1 else data_axes[0])
-        step = jax.shard_map(
+        step = shard_map_compat(
             step_inner, mesh=mesh, axis_names=set(data_axes),
             in_specs=(jax.tree.map(lambda _: pspec, state),
                       {"tokens": bspec, "labels": bspec}),

@@ -1,28 +1,43 @@
 """bbop_* — array-level SIMDRAM operations (paper Table 1 ISA extensions).
 
-Each ``bbop_<op>(dst ← srcs)`` mirrors one CPU ISA extension from the paper:
-the operand arrays are transposed to the vertical layout (the transposition
-unit, §5.1), the compiled μProgram for the operation is executed over the
-bit-planes (Step 3), and results are transposed back.  μPrograms are compiled
-once per (operation, element-width) and cached — exactly the paper's
-μProgram Memory/Scratchpad behavior.
+Each ``bbop_<op>(dst ← srcs)`` mirrors one CPU ISA extension from the paper.
+Two operand forms are accepted everywhere:
 
-The execution backend is the trace-time unrolled engine
-(``repro.core.unrolled``): jit-compatible, shardable (the lane dimension is
-data-parallel), and differentiable-adjacent (integer ops; models use
-straight-through estimators where needed).
+* **horizontal** ``jax.Array`` (compat path): operands are transposed to the
+  vertical layout (the transposition unit, §5.1), the compiled μProgram is
+  executed over the bit-planes (Step 3), and results are transposed back —
+  one conversion round-trip *per op*.
+* **plane-resident** :class:`~repro.simdram.layout.BitplaneArray` (fused
+  path): planes in, planes out, zero transposition-unit traffic.  Chained
+  ops stay vertical end-to-end, exactly like the paper's Steps 1–3 that only
+  pay layout conversion at the memory boundary.
+
+``simdram_pipeline`` is the ergonomic wrapper for the fused path: it loads
+operands vertical in one batched transposition pass, keeps every
+intermediate plane-resident, and stores results back horizontal in one pass.
+
+Execution dispatches through the backend registry
+(:mod:`repro.core.backends`): ``unrolled`` (trace-time jnp, default),
+``pallas`` (the Fig.-7 control-unit FSM kernel), ``reference`` (the numpy
+``Subarray`` oracle).  Select per call (``backend="pallas"``), per scope
+(``with use_backend(...)``), or process-wide (``set_default_backend``).
+μPrograms are compiled once per (operation, element-width) and cached — the
+paper's μProgram Memory/Scratchpad behavior.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from ..core.backends import (execute_program, list_backends,  # noqa: F401
+                             set_default_backend, use_backend)
 from ..core.circuits import compile_operation
-from ..core.unrolled import run_unrolled
 from ..core.uprogram import UProgram
-from ..simdram.layout import LANE_WORD, from_bitplanes, to_bitplanes
+from ..simdram.layout import (LANE_WORD, BitplaneArray, from_bitplanes,
+                              to_bitplanes)
 
 
 @functools.lru_cache(maxsize=None)
@@ -44,27 +59,80 @@ def values_of(planes: jax.Array, n: int, signed: bool = False) -> jax.Array:
     return from_bitplanes(planes, signed=signed)[:n]
 
 
-def _binary(name: str, a: jax.Array, b: jax.Array, n_bits: int,
+# ---------------------------------------------------------------------------
+# Operand coercion / op core
+# ---------------------------------------------------------------------------
+
+
+def _as_planes(x, n_bits: int) -> tuple[BitplaneArray, bool]:
+    """(plane-resident operand, was-already-vertical)."""
+    if isinstance(x, BitplaneArray):
+        if x.n_bits != n_bits:
+            raise ValueError(f"operand is {x.n_bits}-bit, op wants {n_bits}")
+        return x, True
+    return BitplaneArray.from_values(jnp.asarray(x), n_bits), False
+
+
+def _check_banks(ops: list[BitplaneArray]) -> None:
+    banks = {o.n_banks for o in ops}
+    bankednesses = {o.banked for o in ops}
+    if len(banks) > 1 or len(bankednesses) > 1:
+        raise ValueError(f"operand bank shapes disagree: "
+                         f"{[o.planes.shape for o in ops]}")
+    if len({(o.length, o.words) for o in ops}) > 1:
+        # same padded width but different logical lengths would silently
+        # compute against the shorter operand's zero padding
+        raise ValueError(
+            f"operand lengths disagree: "
+            f"{[(o.length, o.words * LANE_WORD) for o in ops]}")
+
+
+def _run_op(name: str, operands: dict[str, BitplaneArray], n_bits: int,
             signed_out: bool = False, out_bits: int | None = None,
-            optimize: bool = True) -> jax.Array:
-    pa, n = planes_of(a, n_bits)
-    pb, _ = planes_of(b, n_bits)
+            optimize: bool = True, backend: str | None = None,
+            keep_planes: bool = False):
+    """Compile-or-fetch + dispatch; returns planes or horizontal values."""
+    ops = list(operands.values())
+    _check_banks(ops)
     prog = compile_bbop(name, n_bits, optimize)
-    outs = run_unrolled(prog, {"a": pa, "b": pb},
-                        out_bits={prog.outputs[0]: out_bits} if out_bits else None)
-    return values_of(outs[prog.outputs[0]], n, signed_out)
+    outs = execute_program(
+        prog, {k: v.planes for k, v in operands.items()},
+        out_bits={prog.outputs[0]: out_bits} if out_bits else None,
+        backend=backend)
+    first = ops[0]
+    res = BitplaneArray(outs[prog.outputs[0]], out_bits or n_bits,
+                        first.length, signed_out)
+    if keep_planes:
+        return res
+    return res.to_values()
 
 
-def _unary(name: str, a: jax.Array, n_bits: int, out_bits: int | None = None,
-           optimize: bool = True) -> jax.Array:
-    pa, n = planes_of(a, n_bits)
-    prog = compile_bbop(name, n_bits, optimize)
-    outs = run_unrolled(prog, {"a": pa},
-                        out_bits={prog.outputs[0]: out_bits} if out_bits else None)
-    return values_of(outs[prog.outputs[0]], n)
+def _fused(*xs) -> bool:
+    return any(isinstance(x, BitplaneArray) for x in xs)
 
 
-def _flip_msb(x: jax.Array, n_bits: int) -> jax.Array:
+def _binary(name: str, a, b, n_bits: int, signed_out: bool = False,
+            out_bits: int | None = None, optimize: bool = True,
+            backend: str | None = None):
+    keep = _fused(a, b)
+    pa, _ = _as_planes(a, n_bits)
+    pb, _ = _as_planes(b, n_bits)
+    return _run_op(name, {"a": pa, "b": pb}, n_bits, signed_out=signed_out,
+                   out_bits=out_bits, optimize=optimize, backend=backend,
+                   keep_planes=keep)
+
+
+def _unary(name: str, a, n_bits: int, out_bits: int | None = None,
+           optimize: bool = True, backend: str | None = None):
+    keep = _fused(a)
+    pa, _ = _as_planes(a, n_bits)
+    return _run_op(name, {"a": pa}, n_bits, out_bits=out_bits,
+                   optimize=optimize, backend=backend, keep_planes=keep)
+
+
+def _flip_msb(x, n_bits: int):
+    if isinstance(x, BitplaneArray):
+        return x.flip_msb()
     return x ^ (1 << (n_bits - 1))
 
 
@@ -132,15 +200,13 @@ def bbop_bitcount(a, n_bits: int = 8, **kw):
 
 # -- N-input reductions (paper: Y = src(1) ∘ src(2) ∘ src(3)) ----------------
 
-def _reduction(name: str, srcs, n_bits: int, optimize: bool = True):
+def _reduction(name: str, srcs, n_bits: int, optimize: bool = True,
+               backend: str | None = None):
     assert len(srcs) == 3, "the compiled reduction μPrograms are 3-input"
-    planes = {}
-    n = None
-    for k, s in enumerate(srcs):
-        planes[f"s{k}"], n = planes_of(s, n_bits)
-    prog = compile_bbop(name, n_bits, optimize)
-    outs = run_unrolled(prog, planes)
-    return values_of(outs[prog.outputs[0]], n)
+    keep = _fused(*srcs)
+    operands = {f"s{k}": _as_planes(s, n_bits)[0] for k, s in enumerate(srcs)}
+    return _run_op(name, operands, n_bits, optimize=optimize,
+                   backend=backend, keep_planes=keep)
 
 
 def bbop_and(srcs, n_bits: int = 8, **kw):
@@ -157,10 +223,105 @@ def bbop_xor(srcs, n_bits: int = 8, **kw):
 
 # -- predication (bbop_if_else dst, src_1, src_2, select, size, n) ------------
 
-def bbop_if_else(sel, a, b, n_bits: int = 8, optimize: bool = True):
-    pa, n = planes_of(a, n_bits)
-    pb, _ = planes_of(b, n_bits)
-    ps, _ = planes_of(sel.astype(jnp.uint32), 1)
-    prog = compile_bbop("if_else", n_bits, optimize)
-    outs = run_unrolled(prog, {"a": pa, "b": pb, "sel": ps})
-    return values_of(outs[prog.outputs[0]], n)
+def bbop_if_else(sel, a, b, n_bits: int = 8, optimize: bool = True,
+                 backend: str | None = None):
+    keep = _fused(sel, a, b)
+    pa, _ = _as_planes(a, n_bits)
+    pb, _ = _as_planes(b, n_bits)
+    if isinstance(sel, BitplaneArray):
+        ps = sel if sel.n_bits == 1 else sel.astype_bits(1)
+    else:
+        ps, _ = _as_planes(sel.astype(jnp.uint32), 1)
+    return _run_op("if_else", {"a": pa, "b": pb, "sel": ps}, n_bits,
+                   optimize=optimize, backend=backend, keep_planes=keep)
+
+
+# ---------------------------------------------------------------------------
+# Plane-resident pipelines
+# ---------------------------------------------------------------------------
+
+
+class simdram_pipeline(contextlib.AbstractContextManager):
+    """Keep a chain of bbops vertical end-to-end.
+
+    ::
+
+        with simdram_pipeline(backend="unrolled") as p:
+            a, b, c = p.load([av, bv, cv], n_bits=8)
+            out = bbop_relu(bbop_add(bbop_mul(a, b, 8), c, 8), 8)
+            result = p.store(out)
+
+    ``load`` transposes all operands in ONE pass of the transposition unit
+    (operands are stacked along the lane axis, like the hardware streaming a
+    block through the unit); every intermediate stays a
+    :class:`BitplaneArray`; ``store`` pays the single reverse pass.  The
+    scope also pins the execution backend for every op inside it.
+    """
+
+    def __init__(self, backend: str | None = None, banks: int | None = None):
+        self.backend = backend
+        self.banks = banks
+        self._ctx = None
+
+    def __enter__(self):
+        if self.backend is not None:
+            self._ctx = use_backend(self.backend)
+            self._ctx.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        if self._ctx is not None:
+            self._ctx.__exit__(*exc)
+        return False
+
+    def load(self, arrays, n_bits: int, signed: bool = False):
+        """Horizontal array(s) → plane-resident, in one transposition pass.
+
+        ``arrays`` may be a single array or a list; each entry is ``(E,)``
+        or — when the pipeline is banked — ``(banks, E)``.  Returns
+        BitplaneArray(s) matching the input structure.
+        """
+        single = not isinstance(arrays, (list, tuple))
+        xs = [jnp.asarray(a) for a in ([arrays] if single else arrays)]
+        shapes = {x.shape for x in xs}
+        if len(shapes) > 1:
+            raise ValueError(f"load operands disagree in shape: {shapes}")
+        if self.banks is not None and (
+                xs[0].ndim != 2 or xs[0].shape[0] != self.banks):
+            raise ValueError(
+                f"banks={self.banks} pipeline expects (banks, E) operands, "
+                f"got shape {xs[0].shape}")
+        banked = xs[0].ndim == 2
+        stacked = jnp.stack(xs)                  # (K, E) or (K, banks, E)
+        flat = stacked.reshape(len(xs) * (xs[0].shape[0] if banked else 1),
+                               xs[0].shape[-1])
+        bpa = BitplaneArray.from_values(flat, n_bits, signed=signed)
+        # bpa.planes: (K[*banks], n_bits, W) — split back per operand
+        planes = bpa.planes
+        outs = []
+        for k in range(len(xs)):
+            if banked:
+                nb = xs[0].shape[0]
+                p = planes[k * nb:(k + 1) * nb]
+            else:
+                p = planes[k]
+            outs.append(BitplaneArray(p, n_bits, xs[0].shape[-1], signed))
+        return outs[0] if single else outs
+
+    def store(self, *results):
+        """Plane-resident result(s) → horizontal, in one reverse pass when
+        the results share a layout (width/bits/length/signedness); mixed
+        layouts fall back to one pass per result."""
+        if len(results) == 1:
+            return results[0].to_values()
+        # stack along the bank axis so the reverse pass is also single
+        layouts = {(r.planes.shape[-1], r.n_bits, r.length, r.signed)
+                   for r in results}
+        if len(layouts) == 1 and not any(r.banked for r in results):
+            merged = BitplaneArray(
+                jnp.stack([r.planes for r in results]),
+                results[0].n_bits, results[0].length,
+                results[0].signed)
+            vals = merged.to_values()
+            return tuple(vals[i] for i in range(len(results)))
+        return tuple(r.to_values() for r in results)

@@ -3,6 +3,13 @@
 ``make_serve_step`` builds the function that the decode dry-run cells lower:
 one new token per sequence against a KV cache of ``max_seq`` (the assigned
 ``decode_32k`` / ``long_500k`` shapes).
+
+``simdram_greedy_token`` is the PuM-offloaded sampler: per-sequence logits
+are quantized and the greedy token is selected by a bank-batched SIMDRAM
+max tournament — each sequence's logits occupy one DRAM bank (the paper's
+16-bank scaling), the whole batch votes in parallel, and every comparison
+is a ``bbop_greater``/``bbop_if_else`` pair executing on the selected
+backend with zero per-op layout conversion.
 """
 from __future__ import annotations
 
@@ -11,6 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..models.transformer import forward, init_cache_shapes
+from ..ops.bbops import bbop_greater, bbop_if_else, simdram_pipeline
 
 
 def make_prefill(cfg: ModelConfig):
@@ -29,9 +37,86 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+# ---------------------------------------------------------------------------
+# PuM-offloaded greedy sampling (bank-batched SIMDRAM argmax)
+# ---------------------------------------------------------------------------
+
+_MIN_LANES = 32          # one packed word — the tournament floor
+
+
+def simdram_argmax(values: jax.Array, n_bits: int = 8,
+                   backend: str | None = None) -> jax.Array:
+    """Row-wise argmax of unsigned ``values (B, V)`` via a plane-resident
+    max tournament, one bank per row.
+
+    Values and winner indices are loaded vertical up front (one
+    transposition pass each — they differ in width, so they cannot share a
+    pass); each round splits the lane axis in half (free row/lane
+    re-indexing) and keeps the winners with one ``bbop_greater`` + two
+    ``bbop_if_else`` — all banks in parallel, zero per-op conversions.  The
+    final ≤32 candidates (one packed word) pay one reverse pass each and
+    are reduced on the host, like a warp-level epilogue: 4 transposition
+    passes total regardless of V or round count.  Ties resolve to an
+    arbitrary maximal index.
+    """
+    b, v = values.shape
+    lanes = max(_MIN_LANES, 1 << (v - 1).bit_length())
+    vals = jnp.pad(values.astype(jnp.uint32), ((0, 0), (0, lanes - v)))
+    idx_bits = max(1, (lanes - 1).bit_length())
+    idx = jnp.tile(jnp.arange(lanes, dtype=jnp.int32)[None, :], (b, 1))
+    with simdram_pipeline(banks=b, backend=backend) as p:
+        cur_v = p.load(vals, n_bits)
+        cur_i = p.load(idx, idx_bits)
+        while cur_v.words > _MIN_LANES // 32:
+            lo_v, hi_v = cur_v.split_lanes()
+            lo_i, hi_i = cur_i.split_lanes()
+            win = bbop_greater(hi_v, lo_v, n_bits)
+            cur_v = bbop_if_else(win, hi_v, lo_v, n_bits)
+            cur_i = bbop_if_else(win, hi_i, lo_i, idx_bits)
+        final_v = cur_v.to_values()              # (B, ≤32)
+        final_i = cur_i.to_values()
+    slot = jnp.argmax(final_v, axis=-1)
+    return jnp.take_along_axis(final_i, slot[:, None], -1)[:, 0]
+
+
+def simdram_greedy_token(logits: jax.Array, n_bits: int = 8,
+                         backend: str | None = None) -> jax.Array:
+    """Greedy token per sequence, selected in-memory.
+
+    Logits ``(B, V)`` are affinely quantized per row to ``n_bits`` unsigned
+    levels (the transposition-unit write format) and ranked by the banked
+    SIMDRAM tournament.  Quantization collisions among near-ties may pick a
+    token within one quantization bin of the float argmax.  Non-finite
+    logits (vocab masking with ``-inf``) map to bin 0 rather than
+    poisoning the per-row scale.
+    """
+    finite = jnp.isfinite(logits)
+    lo = jnp.min(jnp.where(finite, logits, jnp.inf), -1, keepdims=True)
+    hi = jnp.max(jnp.where(finite, logits, -jnp.inf), -1, keepdims=True)
+    scale = (2 ** n_bits - 1) / jnp.maximum(hi - lo, 1e-9)
+    q = jnp.round((logits - lo) * scale)
+    q = jnp.clip(jnp.where(finite, q, 0), 0, 2 ** n_bits - 1)
+    return simdram_argmax(q.astype(jnp.int32), n_bits=n_bits,
+                          backend=backend)
+
+
 def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
-                  max_seq: int | None = None, extra_batch: dict | None = None):
-    """e2e greedy decoding loop (examples/tests; single host)."""
+                  max_seq: int | None = None, extra_batch: dict | None = None,
+                  sampler: str = "host", sampler_backend: str | None = None):
+    """e2e greedy decoding loop (examples/tests; single host).
+
+    ``sampler="simdram"`` offloads greedy token selection to the
+    bank-batched PuM tournament (:func:`simdram_greedy_token`); ``"host"``
+    is the plain ``jnp.argmax``.
+    """
+    if sampler == "simdram":
+        def pick(logits):
+            return simdram_greedy_token(logits, backend=sampler_backend)
+    elif sampler == "host":
+        def pick(logits):
+            return jnp.argmax(logits, -1)
+    else:
+        raise ValueError(f"unknown sampler {sampler!r}")
     b, s = prompt.shape
     max_seq = max_seq or (s + steps)
     cache_sds = init_cache_shapes(cfg, b, max_seq)
@@ -47,11 +132,11 @@ def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
         batch["mrope_positions"] = jnp.tile(
             jnp.arange(s)[None, :, None], (b, 1, 3))
     logits, caches = jax.jit(prefill)(params, batch, caches)
-    out = [jnp.argmax(logits[:, -1], -1)]
+    out = [pick(logits[:, -1])]
     for t in range(steps - 1):
         db = {"tokens": out[-1][:, None], **extra}
         if cfg.rope == "mrope":
             db["mrope_positions"] = jnp.full((b, 1, 3), s + t, jnp.int32)
         logits, caches = step(params, caches, db)
-        out.append(jnp.argmax(logits[:, -1], -1))
+        out.append(pick(logits[:, -1]))
     return jnp.stack(out, 1)

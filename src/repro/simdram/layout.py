@@ -9,14 +9,38 @@ element *j*.
 These are the pure-jnp reference implementations; the Pallas kernel in
 ``repro.kernels.bitplane_transpose`` is the production path and is verified
 against these in tests.
+
+Plane-resident values.  :class:`BitplaneArray` wraps planes together with
+their element width / logical length / signedness so chained ``bbop_*``
+operations can stay vertical end-to-end (paper Steps 1–3 keep operands in
+the subarray; the transposition unit is only paid at the memory boundary).
+Every trace-level layout conversion is counted in :data:`TRANSPOSE_STATS`
+so tests and benchmarks can assert how often the transposition unit ran.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 LANE_WORD = 32  # lanes packed per uint32 word
+
+# trace-level transposition-unit accounting: one entry per to/from pass
+# (a vectorized pass over stacked operands counts once, like the hardware
+# streaming a block through the transposition unit)
+TRANSPOSE_STATS = {"to_bitplanes": 0, "from_bitplanes": 0}
+
+
+def reset_transpose_stats() -> None:
+    TRANSPOSE_STATS["to_bitplanes"] = 0
+    TRANSPOSE_STATS["from_bitplanes"] = 0
+
+
+def transpose_counts() -> tuple[int, int]:
+    """(to_bitplanes passes, from_bitplanes passes) since the last reset."""
+    return (TRANSPOSE_STATS["to_bitplanes"], TRANSPOSE_STATS["from_bitplanes"])
 
 
 def to_bitplanes(values: jax.Array, n_bits: int) -> jax.Array:
@@ -27,6 +51,7 @@ def to_bitplanes(values: jax.Array, n_bits: int) -> jax.Array:
     """
     (e,) = values.shape
     assert e % LANE_WORD == 0, "lane count must be a multiple of 32"
+    TRANSPOSE_STATS["to_bitplanes"] += 1
     u = values.astype(jnp.uint32)
     bits = (u[None, :] >> jnp.arange(n_bits, dtype=jnp.uint32)[:, None]) & 1
     bits = bits.reshape(n_bits, e // LANE_WORD, LANE_WORD)
@@ -37,6 +62,7 @@ def to_bitplanes(values: jax.Array, n_bits: int) -> jax.Array:
 def from_bitplanes(planes: jax.Array, signed: bool = False,
                    dtype=jnp.int32) -> jax.Array:
     """uint32[n_bits, W] → int array (32·W,)."""
+    TRANSPOSE_STATS["from_bitplanes"] += 1
     n_bits, w = planes.shape
     shifts = jnp.arange(LANE_WORD, dtype=jnp.uint32)
     bits = (planes[:, :, None] >> shifts) & 1          # (n_bits, W, 32)
@@ -59,6 +85,127 @@ def unpack_mask(plane: jax.Array) -> jax.Array:
     (w,) = plane.shape
     shifts = jnp.arange(LANE_WORD, dtype=jnp.uint32)
     return (((plane[:, None] >> shifts) & 1) != 0).reshape(w * LANE_WORD)
+
+
+# -- plane-resident arrays ---------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitplaneArray:
+    """A value living in SIMDRAM's vertical layout.
+
+    ``planes`` is ``uint32[n_bits, W]`` (single subarray) or
+    ``uint32[banks, n_bits, W]`` (one subarray per bank — the paper's
+    16-bank scaling; backends vmap over the leading axis).  ``length`` is
+    the logical element count per bank (lanes beyond it are padding).
+    """
+
+    planes: jax.Array
+    n_bits: int
+    length: int
+    signed: bool = False
+
+    # -- pytree protocol (jit/vmap-transparent; metadata is static) ---------
+    def tree_flatten(self):
+        return (self.planes,), (self.n_bits, self.length, self.signed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        n_bits, length, signed = aux
+        return cls(children[0], n_bits, length, signed)
+
+    @property
+    def banked(self) -> bool:
+        return self.planes.ndim == 3
+
+    @property
+    def n_banks(self) -> int:
+        return self.planes.shape[0] if self.banked else 1
+
+    @property
+    def words(self) -> int:
+        return self.planes.shape[-1]
+
+    # -- memory-boundary conversions (each is ONE transposition-unit pass) --
+    @classmethod
+    def from_values(cls, values: jax.Array, n_bits: int,
+                    signed: bool = False) -> "BitplaneArray":
+        """Horizontal ints (E,) or (banks, E) → plane-resident array.
+
+        Banked inputs are transposed in a single vectorized pass: banks are
+        concatenated along the lane axis (lane padding keeps each bank
+        word-aligned), exactly one streaming pass through the transposition
+        unit.
+        """
+        banked = values.ndim == 2
+        e = values.shape[-1]
+        pad = (-e) % LANE_WORD
+        if pad:
+            pad_width = ((0, 0), (0, pad)) if banked else ((0, pad),)
+            values = jnp.pad(values, pad_width)
+        if banked:
+            banks = values.shape[0]
+            planes = to_bitplanes(values.reshape(-1), n_bits)
+            w = planes.shape[1] // banks
+            planes = planes.reshape(n_bits, banks, w).transpose(1, 0, 2)
+        else:
+            planes = to_bitplanes(values, n_bits)
+        return cls(planes, n_bits, e, signed)
+
+    def to_values(self, dtype=jnp.int32) -> jax.Array:
+        """Plane-resident → horizontal ints (E,) or (banks, E) — one pass."""
+        if self.banked:
+            banks, n_bits, w = self.planes.shape
+            flat = self.planes.transpose(1, 0, 2).reshape(n_bits, banks * w)
+            vals = from_bitplanes(flat, signed=self.signed, dtype=dtype)
+            return vals.reshape(banks, w * LANE_WORD)[:, :self.length]
+        return from_bitplanes(self.planes, signed=self.signed,
+                              dtype=dtype)[:self.length]
+
+    # -- cheap plane-level rewrites (no transposition-unit traffic) ---------
+    def flip_msb(self) -> "BitplaneArray":
+        """Invert the sign plane (unsigned-compare bias trick) in place —
+        a single row operation, no layout conversion."""
+        msb = self.n_bits - 1
+        planes = self.planes
+        if self.banked:
+            planes = planes.at[:, msb, :].set(~planes[:, msb, :])
+        else:
+            planes = planes.at[msb, :].set(~planes[msb, :])
+        return dataclasses.replace(self, planes=planes)
+
+    def split_lanes(self) -> tuple["BitplaneArray", "BitplaneArray"]:
+        """Split the lane axis in half (word-aligned): (lo, hi) halves.
+
+        Lane re-indexing only — no transposition-unit traffic.  Requires an
+        even word count and a fully-padded array (length == lanes), which
+        tournament-style reductions maintain by construction.
+        """
+        w = self.words
+        if w % 2:
+            raise ValueError("lane split needs an even word count")
+        half_lanes = (w // 2) * LANE_WORD
+        lo = dataclasses.replace(self, planes=self.planes[..., :w // 2],
+                                 length=min(self.length, half_lanes))
+        hi = dataclasses.replace(self, planes=self.planes[..., w // 2:],
+                                 length=min(self.length, half_lanes))
+        return lo, hi
+
+    def astype_bits(self, n_bits: int) -> "BitplaneArray":
+        """Zero-extend or truncate the plane stack (free row re-indexing)."""
+        if n_bits == self.n_bits:
+            return self
+        axis = 1 if self.banked else 0
+        cur = self.planes.shape[axis]
+        if n_bits < cur:
+            planes = (self.planes[:, :n_bits] if self.banked
+                      else self.planes[:n_bits])
+        else:
+            pad = [(0, 0)] * self.planes.ndim
+            pad[axis] = (0, n_bits - cur)
+            planes = jnp.pad(self.planes, pad)
+        return dataclasses.replace(self, planes=planes, n_bits=n_bits)
 
 
 # -- numpy twin used by the reference executor tests -------------------------

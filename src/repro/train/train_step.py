@@ -148,7 +148,8 @@ def _majority_from_packed(words: jax.Array, n_voters: int, n: int):
 
 def make_compressed_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                                mesh, sign_lr_scale: float = 1.0,
-                               fused: bool = True, two_phase: bool = False):
+                               fused: bool = True, two_phase: bool = False,
+                               exchange: str = "packed"):
     """shard_map step: per-DP-replica grads → error-feedback add → packed
     sign exchange over the data axes → bit-plane majority vote → update.
     Model-axis sharding stays under XLA's automatic partitioner (auto axes).
@@ -161,25 +162,44 @@ def make_compressed_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     all-to-all a 1/R slice of packed words to each voter, majority locally,
     all-gather only the majority result: per-device bytes ≈ 2·n/32 words
     independent of R (the reduce-scatter analogue for majority voting).
+
+    ``exchange`` selects the vote collective: ``"packed"`` (all-gather of
+    bit-packed sign planes, the true 32×-compressed wire format) or
+    ``"psum"`` (sum of ±1 votes — the identical majority, since
+    popcount(ones) > R/2 ⇔ Σ±1 > 0, but exchanged uncompressed; the
+    dense-allreduce control for wire-byte comparisons).
     """
     loss_fn = make_loss_fn(cfg, loss_chunk=cfg.loss_chunk)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # static voter count: the mesh is known at build time (and jax 0.4.x has
+    # no jax.lax.axis_size to query it inside the traced body)
+    n_voters = 1
+    for a in data_axes:
+        n_voters *= int(mesh.shape[a])
+    if exchange not in ("packed", "psum"):
+        raise ValueError(f"unknown exchange mode {exchange!r}")
+
+    def _psum_vote(gf):
+        """Majority direction via Σ±1 (wire-uncompressed, vote-identical)."""
+        votes = jnp.where(gf >= 0, jnp.int32(1), jnp.int32(-1))
+        counts = jax.lax.psum(votes, data_axes)
+        return (counts > 0).astype(jnp.float32) * 2 - 1
 
     def step(state: TrainState, batch):
         (_, metrics), grads = grad_fn(state.params, batch)
         # grads here are per-DP-shard (shard_map over data axes)
-        n_voters = 1
-        for a in data_axes:
-            n_voters *= jax.lax.axis_size(a)
 
         def compress_one(g, e):
             gf = g.astype(jnp.float32) + e
             scale = jnp.mean(jnp.abs(gf))
-            packed = _pack_signs(gf)
-            gathered = jax.lax.all_gather(packed, data_axes, tiled=False)
-            gathered = gathered.reshape(n_voters, -1)
-            maj = _majority_from_packed(gathered, n_voters, gf.size)
+            if exchange == "psum":
+                maj = _psum_vote(gf.reshape(-1))
+            else:
+                packed = _pack_signs(gf)
+                gathered = jax.lax.all_gather(packed, data_axes, tiled=False)
+                gathered = gathered.reshape(n_voters, -1)
+                maj = _majority_from_packed(gathered, n_voters, gf.size)
             maj = maj.reshape(g.shape)
             scale = jax.lax.pmean(scale, data_axes)
             decoded = (maj * scale).astype(jnp.float32)
@@ -203,8 +223,10 @@ def make_compressed_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                 [jnp.mean(jnp.abs(gf[offs[i]:offs[i + 1]]))
                  for i in range(len(sizes))])
             scales = jax.lax.pmean(scales, data_axes)
-            packed = _pack_signs(gf)
-            if two_phase:
+            if exchange == "psum":
+                maj = _psum_vote(gf)
+            elif two_phase:
+                packed = _pack_signs(gf)
                 # pad so the word count splits evenly across voters
                 w = packed.shape[0]
                 pad = (-w) % n_voters
@@ -223,6 +245,7 @@ def make_compressed_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
                 maj = _majority_from_packed(gathered[None, :], 1,
                                             gf.size + pad * 32)[:gf.size]
             else:
+                packed = _pack_signs(gf)
                 gathered = jax.lax.all_gather(packed, data_axes, tiled=False)
                 maj = _majority_from_packed(gathered.reshape(n_voters, -1),
                                             n_voters, gf.size)

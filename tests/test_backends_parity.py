@@ -1,0 +1,105 @@
+"""Backend registry parity matrix: every executable backend must agree with
+the faithful numpy ``Subarray`` oracle (the ``reference`` backend) op-for-op.
+
+The matrix is (op × element width × backend); operands are random.  This is
+the contract that lets new substrates plug into ``repro.core.backends`` —
+pass this matrix and every ``bbop_*`` / pipeline / serving path works.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.backends import (execute_program, get_backend, list_backends,
+                                 set_default_backend, use_backend)
+from repro.ops import compile_bbop
+from repro.ops.bbops import planes_of, values_of
+
+N = 96
+RNG = np.random.default_rng(0xBEEF)
+
+# op name → (n_inputs, out_bits fn, numpy oracle-of-oracles for sanity)
+BINARY_EXPECT = {
+    "addition": lambda a, b, m: (a + b) & m,
+    "subtraction": lambda a, b, m: (a - b) & m,
+    "multiplication": lambda a, b, m: (a * b) & m,
+    "greater": lambda a, b, m: (a > b).astype(np.int64),
+    "maximum": lambda a, b, m: np.maximum(a, b),
+}
+UNARY_EXPECT = {
+    "relu": lambda a, n: np.where(a >> (n - 1), 0, a),
+}
+EXEC_BACKENDS = ("unrolled", "pallas")
+
+
+def _operands(n_bits):
+    hi = 1 << n_bits
+    a = RNG.integers(0, hi, N).astype(np.int64)
+    b = RNG.integers(0, hi, N).astype(np.int64)
+    return a, b
+
+
+def _run(op, n_bits, backend, operands):
+    planes = {}
+    n = None
+    for name, vals in operands.items():
+        planes[name], n = planes_of(jnp.asarray(vals, jnp.int32), n_bits)
+    prog = compile_bbop(op, n_bits)
+    ob = {prog.outputs[0]: 1} if op == "greater" else None
+    outs = execute_program(prog, planes, out_bits=ob, backend=backend)
+    return np.asarray(values_of(outs[prog.outputs[0]], n))
+
+
+@pytest.mark.parametrize("backend", EXEC_BACKENDS)
+@pytest.mark.parametrize("n_bits", [8, 16])
+@pytest.mark.parametrize("op", sorted(BINARY_EXPECT))
+def test_binary_parity_vs_reference(op, n_bits, backend):
+    a, b = _operands(n_bits)
+    ops = {"a": a, "b": b}
+    got = _run(op, n_bits, backend, ops)
+    oracle = _run(op, n_bits, "reference", ops)
+    np.testing.assert_array_equal(got, oracle)
+    np.testing.assert_array_equal(
+        got, BINARY_EXPECT[op](a, b, (1 << n_bits) - 1))
+
+
+@pytest.mark.parametrize("backend", EXEC_BACKENDS)
+@pytest.mark.parametrize("n_bits", [8, 16])
+@pytest.mark.parametrize("op", sorted(UNARY_EXPECT))
+def test_unary_parity_vs_reference(op, n_bits, backend):
+    a, _ = _operands(n_bits)
+    ops = {"a": a}
+    got = _run(op, n_bits, backend, ops)
+    oracle = _run(op, n_bits, "reference", ops)
+    np.testing.assert_array_equal(got, oracle)
+    np.testing.assert_array_equal(got, UNARY_EXPECT[op](a, n_bits))
+
+
+def test_registry_surface():
+    assert {"reference", "unrolled", "pallas"} <= set(list_backends())
+    assert callable(get_backend("pallas"))
+    with pytest.raises(KeyError):
+        get_backend("no-such-substrate")
+    with pytest.raises(KeyError):
+        set_default_backend("no-such-substrate")
+
+
+def test_use_backend_scopes_default():
+    from repro.core import backends
+    before = backends.default_backend()
+    with use_backend("reference"):
+        assert backends.default_backend() == "reference"
+        with use_backend("pallas"):
+            assert backends.default_backend() == "pallas"
+        assert backends.default_backend() == "reference"
+    assert backends.default_backend() == before
+
+
+def test_bbop_backend_kwarg():
+    from repro.ops import bbop_add
+    a = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    b = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    exp = (np.asarray(a) + np.asarray(b)) & 255
+    for be in ("reference", "unrolled", "pallas"):
+        np.testing.assert_array_equal(
+            np.asarray(bbop_add(a, b, 8, backend=be)), exp)

@@ -1,5 +1,9 @@
 """Distributed behavior on 8 host devices — run in subprocesses so the main
-test process keeps a single CPU device (the dry-run rule)."""
+test process keeps a single CPU device (the dry-run rule).
+
+Whole module is tier-2 (``slow``): every test compiles a multi-device
+training/pipeline step in a fresh subprocess (~10–20 s each).
+"""
 import json
 import os
 import subprocess
@@ -7,6 +11,8 @@ import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -52,8 +58,11 @@ def test_pjit_train_step_on_4x2_mesh():
     assert "OK" in out
 
 
-def test_compressed_majority_vote_training():
-    out = run_with_devices("""
+@pytest.mark.parametrize("exchange", ["packed", "psum"])
+def test_compressed_majority_vote_training(exchange):
+    """Both vote collectives (bit-packed all-gather and the Σ±1 psum
+    control) must train; their majority semantics are identical."""
+    out = run_with_devices(f"""
         import jax, jax.numpy as jnp
         from repro.configs import get_reduced
         from repro.launch.train import setup, build_mesh
@@ -62,7 +71,7 @@ def test_compressed_majority_vote_training():
         cfg = get_reduced('qwen1_5_0_5b')
         mesh = jax.make_mesh((4, 2), ('data', 'model'))
         state, _, step = setup(cfg, mesh, AdamWConfig(lr=5e-3),
-                               compressed=True)
+                               compressed=True, exchange={exchange!r})
         d = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
         batch = synthetic_batch(d, 0)    # fixed batch: optimization signal
         losses = []
@@ -153,6 +162,7 @@ def test_two_phase_majority_vote_training():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as PS
         from repro.configs import get_reduced
+        from repro.distributed.compat import shard_map_compat
         from repro.distributed.sharding import tree_shardings
         from repro.models.params import init_params
         from repro.models.transformer import model_defs
@@ -169,7 +179,7 @@ def test_two_phase_majority_vote_training():
         state = init_train_state(params, compressed=True)
         inner, da = make_compressed_train_step(cfg, AdamWConfig(lr=5e-3),
                                                mesh, two_phase=True)
-        step = jax.jit(jax.shard_map(
+        step = jax.jit(shard_map_compat(
             inner, mesh=mesh, axis_names={'data'},
             in_specs=(jax.tree.map(lambda _: PS(), state),
                       {'tokens': PS('data'), 'labels': PS('data')}),

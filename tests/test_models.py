@@ -1,11 +1,18 @@
 """Per-architecture smoke tests (deliverable f): reduced config of each
-family, one forward + one decode step on CPU, shape + finiteness asserts."""
+family, one forward + one decode step on CPU, shape + finiteness asserts.
+
+Whole module is tier-2 (``slow``): ~2 min of per-arch forwards/decodes.  The
+CI fast tier keeps model-adjacent coverage via test_pum_layers and
+test_train_infra; nightly runs everything.
+"""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.configs.base import SHAPES, shape_applicable

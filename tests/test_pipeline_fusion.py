@@ -1,0 +1,195 @@
+"""Plane-resident pipelines: transposition-unit accounting, BitplaneArray
+semantics, multi-bank batching, and the PuM serving-layer argmax."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.ops import (BitplaneArray, bbop_add, bbop_greater, bbop_if_else,
+                       bbop_mul, bbop_relu, bbop_sub, simdram_pipeline)
+from repro.simdram.layout import reset_transpose_stats, transpose_counts
+
+RNG = np.random.default_rng(11)
+N = 100
+A = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+B = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+C = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+An, Bn, Cn = map(np.asarray, (A, B, C))
+CHAIN_EXP = np.where((((An * Bn) & 255) + Cn & 255) & 0x80, 0,
+                     ((An * Bn) & 255) + Cn & 255)
+
+
+def test_chained_pipeline_single_transpose_pair():
+    """relu(add(mul(a, b), c)) fused: exactly ONE to_bitplanes pass and ONE
+    from_bitplanes pass end-to-end (the acceptance-criterion chain)."""
+    reset_transpose_stats()
+    with simdram_pipeline() as p:
+        pa, pb, pc = p.load([A, B, C], 8)
+        out = bbop_relu(bbop_add(bbop_mul(pa, pb, 8), pc, 8), 8)
+        res = p.store(out)
+    assert transpose_counts() == (1, 1)
+    np.testing.assert_array_equal(np.asarray(res), CHAIN_EXP)
+
+
+def test_unfused_chain_pays_per_op_transposes():
+    reset_transpose_stats()
+    res = bbop_relu(bbop_add(bbop_mul(A, B, 8), C, 8), 8)
+    to_n, from_n = transpose_counts()
+    assert to_n >= 3 and from_n >= 3          # one round-trip per op
+    np.testing.assert_array_equal(np.asarray(res), CHAIN_EXP)
+
+
+def test_mixed_operands_promote_to_planes():
+    """A BitplaneArray anywhere in the op keeps the result vertical."""
+    pa = BitplaneArray.from_values(A, 8)
+    out = bbop_add(pa, B, 8)                  # horizontal b auto-coerces
+    assert isinstance(out, BitplaneArray)
+    np.testing.assert_array_equal(np.asarray(out.to_values()),
+                                  (An + Bn) & 255)
+
+
+def test_bitplane_roundtrip_and_signed():
+    vals = jnp.asarray(RNG.integers(-128, 128, 77), jnp.int32)
+    bpa = BitplaneArray.from_values(vals, 8, signed=True)
+    np.testing.assert_array_equal(np.asarray(bpa.to_values()),
+                                  np.asarray(vals))
+
+
+def test_banked_pipeline_matches_per_bank():
+    banks, n = 4, 64
+    ab = jnp.asarray(RNG.integers(0, 256, (banks, n)), jnp.int32)
+    bb = jnp.asarray(RNG.integers(0, 256, (banks, n)), jnp.int32)
+    reset_transpose_stats()
+    with simdram_pipeline(banks=banks) as p:
+        pa, pb = p.load([ab, bb], 8)
+        res = p.store(bbop_add(pa, pb, 8))
+    assert transpose_counts() == (1, 1)       # banks ride the same pass
+    assert res.shape == (banks, n)
+    np.testing.assert_array_equal(
+        np.asarray(res), (np.asarray(ab) + np.asarray(bb)) & 255)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_banked_pipeline_other_backends(backend):
+    banks, n = 2, 64
+    ab = jnp.asarray(RNG.integers(0, 256, (banks, n)), jnp.int32)
+    bb = jnp.asarray(RNG.integers(0, 256, (banks, n)), jnp.int32)
+    with simdram_pipeline(banks=banks, backend=backend) as p:
+        pa, pb = p.load([ab, bb], 8)
+        res = p.store(bbop_sub(pa, pb, 8))
+    np.testing.assert_array_equal(
+        np.asarray(res), (np.asarray(ab) - np.asarray(bb)) & 255)
+
+
+def test_predicated_chain_stays_vertical():
+    """Paper Listing 1 fused: C = (A > pred) ? A+B : A−B, one pair."""
+    pred = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    reset_transpose_stats()
+    with simdram_pipeline() as p:
+        pa, pb, pp = p.load([A, B, pred], 8)
+        d = bbop_add(pa, pb, 8)
+        e = bbop_sub(pa, pb, 8)
+        f = bbop_greater(pa, pp, 8)
+        res = p.store(bbop_if_else(f, d, e, 8))
+    assert transpose_counts() == (1, 1)
+    exp = np.where(An > np.asarray(pred), (An + Bn) & 255, (An - Bn) & 255)
+    np.testing.assert_array_equal(np.asarray(res), exp)
+
+
+def test_signed_compare_on_planes_flips_msb_in_place():
+    a = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    b = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    with simdram_pipeline() as p:
+        pa, pb = p.load([a, b], 8)
+        res = bbop_greater(pa, pb, 8, signed=True)
+    exp = (np.asarray(a).astype(np.int8) >
+           np.asarray(b).astype(np.int8)).astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(res.to_values()), exp)
+
+
+def test_store_multiple_results_single_pass():
+    reset_transpose_stats()
+    with simdram_pipeline() as p:
+        pa, pb = p.load([A, B], 8)
+        s, d = p.store(bbop_add(pa, pb, 8), bbop_sub(pa, pb, 8))
+    assert transpose_counts() == (1, 1)
+    np.testing.assert_array_equal(np.asarray(s), (An + Bn) & 255)
+    np.testing.assert_array_equal(np.asarray(d), (An - Bn) & 255)
+
+
+def test_store_mixed_layout_results_decode_independently():
+    """Results with different lengths/signedness must not inherit the first
+    result's metadata through the merged reverse pass."""
+    short = jnp.asarray(RNG.integers(0, 256, 40), jnp.int32)
+    long_ = jnp.asarray(RNG.integers(0, 256, 60), jnp.int32)
+    with simdram_pipeline() as p:
+        ps = p.load(short, 8)
+        pl = p.load(long_, 8)
+        rs, rl = p.store(bbop_add(ps, ps, 8), bbop_add(pl, pl, 8))
+    assert rs.shape == (40,) and rl.shape == (60,)
+    np.testing.assert_array_equal(np.asarray(rl),
+                                  (2 * np.asarray(long_)) & 255)
+
+
+def test_length_mismatch_rejected_not_padded():
+    """Same padded width, different logical lengths: must error, not
+    silently add the shorter operand's zero padding."""
+    long_ = BitplaneArray.from_values(jnp.full(60, 7, jnp.int32), 8)
+    short = BitplaneArray.from_values(jnp.full(40, 5, jnp.int32), 8)
+    with pytest.raises(ValueError, match="length"):
+        bbop_add(long_, short, 8)
+
+
+def test_banked_load_rejects_wrong_bank_shapes():
+    with simdram_pipeline(banks=4) as p:
+        with pytest.raises(ValueError, match="banks"):
+            p.load(jnp.zeros(64, jnp.int32), 8)          # 1-D into banked
+        with pytest.raises(ValueError, match="banks"):
+            p.load(jnp.zeros((2, 64), jnp.int32), 8)     # wrong bank count
+
+
+def test_split_lanes_is_free():
+    vals = jnp.asarray(RNG.integers(0, 256, 128), jnp.int32)
+    bpa = BitplaneArray.from_values(vals, 8)
+    reset_transpose_stats()
+    lo, hi = bpa.split_lanes()
+    assert transpose_counts() == (0, 0)
+    np.testing.assert_array_equal(np.asarray(lo.to_values()),
+                                  np.asarray(vals)[:64])
+    np.testing.assert_array_equal(np.asarray(hi.to_values()),
+                                  np.asarray(vals)[64:])
+
+
+# ---------------------------------------------------------------------------
+# Serving layer: bank-batched PuM argmax
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,v", [(4, 100), (2, 257), (1, 33)])
+def test_simdram_argmax_matches_host(b, v):
+    from repro.serve.decode import simdram_argmax
+    vals = np.stack([RNG.permutation(4 * v)[:v] for _ in range(b)])
+    n_bits = int(vals.max()).bit_length()
+    got = np.asarray(simdram_argmax(jnp.asarray(vals), n_bits=n_bits))
+    picked = vals[np.arange(b), got]
+    np.testing.assert_array_equal(picked, vals.max(-1))   # a maximal index
+    np.testing.assert_array_equal(got, vals.argmax(-1))   # unique ⇒ exact
+
+
+def test_simdram_greedy_token_matches_float_argmax():
+    from repro.serve.decode import simdram_greedy_token
+    logits = jnp.asarray(RNG.normal(size=(3, 256)).astype(np.float32))
+    # well-separated maxima survive 8-bit quantization exactly
+    logits = logits.at[0, 17].set(9.0).at[1, 200].set(9.0).at[2, 3].set(9.0)
+    np.testing.assert_array_equal(
+        np.asarray(simdram_greedy_token(logits)), np.array([17, 200, 3]))
+
+
+def test_simdram_greedy_token_survives_vocab_masking():
+    """-inf masked logits must map to bin 0, not poison the row scale."""
+    from repro.serve.decode import simdram_greedy_token
+    logits = jnp.asarray(RNG.normal(size=(2, 128)).astype(np.float32))
+    logits = logits.at[0, 64:].set(-jnp.inf).at[1, :32].set(-jnp.inf)
+    logits = logits.at[0, 11].set(9.0).at[1, 77].set(9.0)
+    np.testing.assert_array_equal(
+        np.asarray(simdram_greedy_token(logits)), np.array([11, 77]))

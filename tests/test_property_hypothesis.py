@@ -1,6 +1,13 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped (not errored) when hypothesis isn't installed — CI installs it via
+the pyproject dev extra; minimal environments still collect cleanly.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.circuits import compile_operation
 from repro.core.executor import from_planes, run_program, to_planes
