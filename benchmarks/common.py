@@ -3,6 +3,8 @@ CSV rows (us_per_call = wall-time of the representative computation on this
 host; derived = the paper-comparable metric)."""
 from __future__ import annotations
 
+import math
+import re
 import time
 
 
@@ -17,3 +19,25 @@ def timed(fn, *args, repeat: int = 3):
         out = fn(*args)
     us = (time.perf_counter() - t0) / repeat * 1e6
     return out, us
+
+
+# modeled-throughput keys in derived columns: modeled_gops=, rowscale16_gops=,
+# cpu_gops=, gops_per_w=, ...  (wall-clock melems_per_s and speedup ratios
+# are deliberately not matched — only model outputs are gated)
+_GOPS_ROW = re.compile(r"\b([A-Za-z0-9_]*gops[A-Za-z0-9_]*)=([^\s,]+)")
+
+
+def bad_perf_values(text: str) -> list[str]:
+    """Every ``*gops*=value`` occurrence that is zero or non-finite — the
+    ``--smoke`` gate that turns perf-model garbage into a failing exit."""
+    bad = []
+    for line in text.splitlines():
+        for key, val in _GOPS_ROW.findall(line):
+            try:
+                x = float(val.rstrip("x"))
+            except ValueError:
+                bad.append(f"{key}={val} (unparsable) in: {line}")
+                continue
+            if not math.isfinite(x) or x == 0:
+                bad.append(f"{key}={val} in: {line}")
+    return bad

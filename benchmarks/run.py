@@ -3,10 +3,17 @@
 table from the multi-pod dry-run artifacts).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,table3,...]
+
+``--smoke`` additionally *gates* on the modeled-throughput rows: any
+``*gops*=`` value that is non-finite or zero fails the run (non-zero
+exit), so the nightly job catches perf-model regressions instead of
+printing garbage.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
 import sys
 import traceback
 
@@ -14,6 +21,7 @@ from . import (bench_apps, bench_area, bench_data_movement,
                bench_dualitycache, bench_energy, bench_reliability,
                bench_roofline, bench_table5_counts, bench_throughput,
                bench_transposition)
+from .common import bad_perf_values
 
 BENCHES = {
     "table5": bench_table5_counts.main,      # Table 5  command counts
@@ -33,28 +41,54 @@ BENCHES = {
 # accepts ``smoke=True`` shrinks its problem sizes
 SMOKE = ("table5", "fig9", "fig14")
 
+class _Tee(io.TextIOBase):
+    def __init__(self, *streams):
+        self.streams = streams
+
+    def write(self, s):
+        for st in self.streams:
+            st.write(s)
+        return len(s)
+
+    def flush(self):
+        for st in self.streams:
+            st.flush()
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI subset with reduced problem sizes")
+                    help="fast CI subset with reduced problem sizes; gates "
+                         "on finite, non-zero modeled-throughput rows")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only
              else list(SMOKE) if args.smoke else list(BENCHES))
     failed = []
     for name in names:
         print(f"\n==== {name} ====", flush=True)
+        captured = io.StringIO()
+        sink = _Tee(sys.stdout, captured) if args.smoke else sys.stdout
         try:
             import inspect
             fn = BENCHES[name]
-            if args.smoke and "smoke" in inspect.signature(fn).parameters:
-                fn(smoke=True)
-            else:
-                fn()
+            with contextlib.redirect_stdout(sink):
+                if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                    fn(smoke=True)
+                else:
+                    fn()
         except Exception:    # noqa: BLE001 — report and continue
             traceback.print_exc()
             failed.append(name)
+            continue
+        if args.smoke:
+            bad = bad_perf_values(captured.getvalue())
+            if bad:
+                print(f"{name}: non-finite/zero modeled-throughput rows:",
+                      file=sys.stderr)
+                for b in bad:
+                    print(f"  {b}", file=sys.stderr)
+                failed.append(name)
     if failed:
         print(f"\nFAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -5,6 +5,8 @@
 3. The paper's Listing 1: predicated vector add/sub via bbops.
 4. Plane-resident pipelines: chain ops vertically, pick a backend, batch
    over banks — zero per-op transposition-unit traffic.
+5. Timed execution: the same fused chain under the modeled-DRAM cost
+   layer — end-to-end nanoseconds/nanojoules/GOps/s from the live run.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -71,6 +73,14 @@ def main():
     assert np.array_equal(np.asarray(banked),
                           (np.asarray(ab) + np.asarray(bb)) & 255)
     print("16-bank batched add: OK", banked.shape)
+
+    # --- timed execution: modeled DRAM cost of the live fused chain ---------
+    with simdram_pipeline(banks=16, timed=True) as p:
+        pa, pb = p.load([ab, bb], 8)
+        p.store(bbop_relu(bbop_add(pa, pb, 8), 8))
+    print("\ntimed 16-bank relu(add(a,b)) — modeled DRAM cost "
+          "(μProgram AAP/AP latencies + movement + transposition):")
+    print(p.perf_report())
 
 
 if __name__ == "__main__":

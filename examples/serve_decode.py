@@ -1,5 +1,7 @@
 """Batched serving example: prefill + greedy decode with sharded KV caches
-(reduced qwen config so it runs on CPU in seconds).
+(reduced qwen config so it runs on CPU in seconds), then the same decode
+with the PuM-offloaded sampler metered by the timed execution layer —
+modeled DRAM cost per decoded token.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -9,6 +11,7 @@ import jax.numpy as jnp
 from repro.configs import get_reduced
 from repro.models.params import init_params
 from repro.models.transformer import model_defs
+from repro.ops import PerfStats
 from repro.serve.decode import greedy_decode
 
 
@@ -27,6 +30,18 @@ def main():
               f"-> {out[i].tolist()}")
     assert out.shape == (batch, gen)
     print("decode OK (greedy, KV-cached)")
+
+    # same decode, sampling in-memory: each sequence's quantized logits in
+    # its own DRAM bank, metered by the timed execution layer
+    stats = PerfStats()
+    out_pum = greedy_decode(params, cfg, prompts, steps=gen,
+                            max_seq=prompt_len + gen, sampler="simdram",
+                            sampler_perf=stats)
+    assert out_pum.shape == (batch, gen)
+    print(f"PuM sampler OK: modeled {stats.total_ns / gen:.0f} ns "
+          f"/ {stats.total_nj / gen:.0f} nJ per decoded token "
+          f"({stats.n_programs // gen} μPrograms/token, "
+          f"banks={stats.max_banks})")
 
 
 if __name__ == "__main__":

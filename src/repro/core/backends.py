@@ -19,16 +19,33 @@ New substrates (real-DRAM timing models, GPU bit-slice engines, …) plug in
 with :func:`register_backend` and are immediately usable from every
 ``bbop_*`` and from :class:`~repro.ops.bbops.simdram_pipeline` via
 ``backend="name"``.
+
+Timed execution.  :func:`timed` opens a scope in which every
+:func:`execute_program` call — on *any* registered substrate — charges its
+modeled DRAM cost to a :class:`PerfStats` accumulator: μProgram command
+latency/energy from :class:`~repro.simdram.timing.SimdramPerfModel`,
+inter-op operand relocation from its ``MovementModel``, and every
+transposition-unit pass (``to_bitplanes``/``from_bitplanes``) from its
+``TranspositionModel``.  Charging is trace-level, like ``TRANSPOSE_STATS``:
+it reflects the command stream the chain *issues*, independent of which
+substrate executes it — that is the paper's §7 methodology (sum of AAP/AP
+command-sequence latencies), now reported per live pipeline instead of by a
+detached model.  This is also the seam a future real-DRAM timing backend
+plugs into: replace the analytic charge with measured cycles, keep the same
+accumulator surface.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..simdram.layout import LANE_WORD, register_transpose_hook
+from ..simdram.timing import SimdramPerfModel
 from .uprogram import UProgram
 
 # backend: (prog, operands: dict[str, uint32[n_bits, W]], out_bits) → outputs
@@ -59,24 +76,242 @@ def default_backend() -> str:
     return _DEFAULT
 
 
+# bumped on every set_default_backend so use_backend can tell "still the
+# default I set" from "somebody re-set it inside my scope" (a plain name
+# comparison cannot: set_default_backend(<the scope's own name>) must win)
+_DEFAULT_EPOCH = 0
+
+
 def set_default_backend(name: str) -> None:
-    global _DEFAULT
+    global _DEFAULT, _DEFAULT_EPOCH
     if name not in _REGISTRY:
         raise KeyError(f"unknown backend {name!r}; registered: "
                        f"{list_backends()}")
     _DEFAULT = name
+    _DEFAULT_EPOCH += 1
 
 
 @contextlib.contextmanager
 def use_backend(name: str):
-    """Scoped default-backend override: ``with use_backend("pallas"): ...``"""
-    global _DEFAULT
+    """Scoped default-backend override: ``with use_backend("pallas"): ...``
+
+    On exit the previous default is restored *only if* no
+    ``set_default_backend`` call was made inside the scope — an explicit
+    set survives the scope instead of being silently discarded.
+    """
+    global _DEFAULT, _DEFAULT_EPOCH
     prev = _DEFAULT
+    epoch_at_entry = _DEFAULT_EPOCH
     set_default_backend(name)
+    token = _DEFAULT_EPOCH
     try:
         yield
     finally:
-        _DEFAULT = prev
+        if _DEFAULT_EPOCH == token:
+            # restoring rewinds the epoch too, so enclosing scopes still
+            # see "unchanged" and restore in turn
+            _DEFAULT = prev
+            _DEFAULT_EPOCH = epoch_at_entry
+
+
+# ---------------------------------------------------------------------------
+# Timed execution: modeled-DRAM cost accounting for any substrate
+# ---------------------------------------------------------------------------
+
+# PerfStats currently charging (a stack: nested timed scopes all observe;
+# the same accumulator registered twice still charges once)
+_ACTIVE_STATS: list["PerfStats"] = []
+
+# op outputs tracked for movement charging are bounded: consumers only ever
+# reach a handful of ops back, and an unbounded map would pin every
+# intermediate plane of a long timed region in memory
+_RESIDENT_CAP = 64
+
+
+@dataclasses.dataclass
+class PerfStats:
+    """Modeled-DRAM cost accumulator for a timed execution scope.
+
+    Three meters, all analytic (paper §7 methodology):
+
+    * ``exec_ns`` / ``exec_nj`` — per ``execute_program`` call, the
+      μProgram's summed AAP/AP command-sequence latency and energy
+      (:meth:`SimdramPerfModel.latency_ns` / ``energy_nj``).  Banks run the
+      command stream in lockstep, so latency is charged once per call and
+      energy × banks.
+    * ``movement_ns`` — per inter-op operand relocation: when an op consumes
+      another op's output planes directly, its ``n_bits`` result rows are
+      charged one intra-bank LISA hop each (``MovementModel``).  Plane-level
+      rewrites (``flip_msb``/``split_lanes``/``astype_bits``) produce new
+      arrays and are *not* tracked — they are free row re-indexing.
+    * ``transpose_ns`` — per transposition-unit pass inside the scope
+      (``TranspositionModel.first_subarray_ns`` of the pass's plane count
+      and lane width).
+
+    Charging is trace-level: under ``jit`` a charge lands once at trace
+    time, like ``TRANSPOSE_STATS``.  Movement/transposition *energy* is not
+    modeled (the paper provides no figures for either); ``total_nj`` is
+    execution energy only.
+    """
+
+    model: SimdramPerfModel = dataclasses.field(
+        default_factory=SimdramPerfModel)
+    exec_ns: float = 0.0
+    exec_nj: float = 0.0
+    movement_ns: float = 0.0
+    transpose_ns: float = 0.0
+    n_programs: int = 0
+    n_commands: int = 0
+    n_moves: int = 0
+    n_transposes: int = 0
+    elem_ops: int = 0
+    max_banks: int = 1
+    per_op: dict = dataclasses.field(default_factory=dict)
+    # id(planes) → planes for the most recent op outputs of this scope
+    # (strong refs so ids cannot be recycled, FIFO-bounded by
+    # _RESIDENT_CAP); consumed ids trigger movement charges
+    _resident: dict = dataclasses.field(default_factory=dict, repr=False)
+    # id(prog) → (latency_ns, energy_nj, n_commands, prog) — scoped to this
+    # accumulator so cache entries die with it
+    _prog_costs: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def _prog_cost(self, prog: UProgram) -> tuple:
+        hit = self._prog_costs.get(id(prog))
+        if hit is None:
+            mix = prog.command_mix()
+            hit = (self.model.latency_ns(prog), self.model.energy_nj(prog),
+                   mix["AAP"] + mix["AP"], prog)
+            self._prog_costs[id(prog)] = hit
+        return hit
+
+    # -- charging (called by execute_program / the layout hooks) ------------
+    def charge_program(self, prog: UProgram, banks: int, lanes: int) -> None:
+        lat, en, cmds, _ = self._prog_cost(prog)
+        self.exec_ns += lat
+        self.exec_nj += en * banks
+        self.n_programs += 1
+        self.n_commands += cmds
+        self.elem_ops += lanes * banks
+        self.max_banks = max(self.max_banks, banks)
+        d = self.per_op.setdefault(f"{prog.name}/{prog.n_bits}b",
+                                   {"calls": 0, "ns": 0.0, "nj": 0.0})
+        d["calls"] += 1
+        d["ns"] += lat
+        d["nj"] += en * banks
+
+    def charge_movement(self, n_rows: int) -> None:
+        self.movement_ns += self.model.movement.intra_bank_ns(n_rows)
+        self.n_moves += 1
+
+    def charge_transpose(self, n_bits: int, lanes: int) -> None:
+        self.transpose_ns += self.model.transposition.first_subarray_ns(
+            n_bits, lanes)
+        self.n_transposes += 1
+
+    def note_output(self, planes) -> None:
+        """Track an op output for movement charging (FIFO-bounded)."""
+        self._resident[id(planes)] = planes
+        while len(self._resident) > _RESIDENT_CAP:
+            del self._resident[next(iter(self._resident))]
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def total_ns(self) -> float:
+        return self.exec_ns + self.movement_ns + self.transpose_ns
+
+    @property
+    def total_nj(self) -> float:
+        return self.exec_nj
+
+    def gops(self) -> float:
+        """Effective element-ops per modeled nanosecond (= GOps/s), counting
+        every engaged SIMD lane × bank and *all* modeled overheads."""
+        return self.elem_ops / self.total_ns if self.total_ns else 0.0
+
+    def gops_per_bank(self) -> float:
+        return self.gops() / max(1, self.max_banks)
+
+    def reset(self) -> None:
+        fresh = PerfStats(model=self.model)
+        for f in dataclasses.fields(self):
+            if f.name != "model":
+                setattr(self, f.name, getattr(fresh, f.name))
+
+    def report(self) -> str:
+        lines = [
+            f"modeled DRAM cost: {self.total_ns:.1f} ns / "
+            f"{self.total_nj:.1f} nJ  ({self.n_programs} μPrograms, "
+            f"{self.n_commands} command sequences, banks={self.max_banks})",
+            f"  execute    {self.exec_ns:12.1f} ns  {self.exec_nj:10.1f} nJ",
+            f"  movement   {self.movement_ns:12.1f} ns  "
+            f"({self.n_moves} relocations)",
+            f"  transpose  {self.transpose_ns:12.1f} ns  "
+            f"({self.n_transposes} passes)",
+            f"  effective  {self.gops():.4f} GOps/s "
+            f"({self.gops_per_bank():.4f} per bank)",
+        ]
+        for op, d in sorted(self.per_op.items()):
+            lines.append(f"    {op:<24} ×{d['calls']:<4} {d['ns']:10.1f} ns "
+                         f"{d['nj']:10.1f} nJ")
+        return "\n".join(lines)
+
+
+def active_stats() -> tuple["PerfStats", ...]:
+    """The PerfStats currently charging (outermost first)."""
+    return tuple(_ACTIVE_STATS)
+
+
+@contextlib.contextmanager
+def timed(backend: str | None = None, stats: PerfStats | None = None,
+          model: SimdramPerfModel | None = None):
+    """Scoped timed execution: every ``execute_program`` call and every
+    transposition-unit pass inside the scope charges its modeled DRAM cost.
+
+    ::
+
+        with timed(backend="pallas") as stats:
+            out = bbop_add(a, b, 8)
+        print(stats.report())
+
+    Pass an existing ``stats`` to keep accumulating across scopes (e.g. one
+    accumulator for a whole decode loop); nested scopes each observe every
+    charge.  Yields the :class:`PerfStats`.
+    """
+    if stats is not None and model is not None and stats.model is not model:
+        raise ValueError(
+            "pass either an existing stats accumulator (charged with its "
+            "own model) or a model for a fresh one, not both — a shared "
+            "accumulator cannot switch models mid-flight")
+    st = stats if stats is not None else PerfStats(
+        model=model or SimdramPerfModel())
+    ctx = use_backend(backend) if backend is not None \
+        else contextlib.nullcontext()
+    with ctx:
+        # an accumulator already active (shared across nested scopes) is
+        # not re-registered — it must charge once, not once per scope
+        fresh = not any(s is st for s in _ACTIVE_STATS)
+        if fresh:
+            _ACTIVE_STATS.append(st)
+        try:
+            yield st
+        finally:
+            if fresh:
+                for i in range(len(_ACTIVE_STATS) - 1, -1, -1):
+                    if _ACTIVE_STATS[i] is st:
+                        del _ACTIVE_STATS[i]
+                        break
+                # movement tracking is scoped: op outputs stop being
+                # "resident" (and their memory is released) when the
+                # accumulator's outermost scope closes
+                st._resident.clear()
+
+
+def _transpose_hook(kind: str, n_bits: int, lanes: int) -> None:
+    for st in _ACTIVE_STATS:
+        st.charge_transpose(n_bits, lanes)
+
+
+register_transpose_hook(_transpose_hook)
 
 
 def execute_program(prog: UProgram, operands: dict, out_bits=None,
@@ -85,22 +320,35 @@ def execute_program(prog: UProgram, operands: dict, out_bits=None,
 
     ``operands``: name → uint32[n_bits, W] or uint32[banks, n_bits, W];
     all operands must agree on bankedness.  Returns planes with a matching
-    leading bank axis when the inputs were banked.
+    leading bank axis when the inputs were banked.  Inside a :func:`timed`
+    scope, the call charges its modeled DRAM cost before dispatch.
     """
     fn = get_backend(backend)
     first = next(iter(operands.values()))
-    if first.ndim == 3:          # bank axis: one subarray per bank
-        if any(v.ndim != 3 for v in operands.values()):
-            raise ValueError("banked execution needs every operand banked")
+    banked = first.ndim == 3
+    if banked and any(v.ndim != 3 for v in operands.values()):
+        raise ValueError("banked execution needs every operand banked")
+    banks = first.shape[0] if banked else 1
+    for st in _ACTIVE_STATS:
+        for planes in operands.values():
+            if id(planes) in st._resident:
+                st.charge_movement(int(planes.shape[-2]))
+        st.charge_program(prog, banks, int(first.shape[-1]) * LANE_WORD)
+    if banked:                   # bank axis: one subarray per bank
         if not getattr(fn, "jax_traceable", True):
             # non-traceable backends (numpy oracle) iterate banks instead
-            banks = first.shape[0]
             per = [fn(prog, {k: v[i] for k, v in operands.items()},
                       out_bits=out_bits) for i in range(banks)]
-            return {k: jnp.stack([p[k] for p in per]) for k in per[0]}
-        return jax.vmap(lambda ops: fn(prog, ops, out_bits=out_bits)
-                        )(operands)
-    return fn(prog, operands, out_bits=out_bits)
+            outs = {k: jnp.stack([p[k] for p in per]) for k in per[0]}
+        else:
+            outs = jax.vmap(lambda ops: fn(prog, ops, out_bits=out_bits)
+                            )(operands)
+    else:
+        outs = fn(prog, operands, out_bits=out_bits)
+    for st in _ACTIVE_STATS:
+        for arr in outs.values():
+            st.note_output(arr)
+    return outs
 
 
 # ---------------------------------------------------------------------------

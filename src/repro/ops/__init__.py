@@ -1,8 +1,8 @@
 """Public bbop API — the SIMDRAM ISA surface (paper Table 1) plus the
 plane-resident pipeline / backend-selection layer."""
-from ..core.backends import (execute_program, list_backends,
+from ..core.backends import (PerfStats, execute_program, list_backends,
                              register_backend, set_default_backend,
-                             use_backend)
+                             timed, use_backend)
 from ..simdram.layout import BitplaneArray
 from .bbops import (bbop_abs, bbop_add, bbop_and, bbop_bitcount, bbop_div,
                     bbop_equal, bbop_greater, bbop_greater_equal,
@@ -13,4 +13,5 @@ from .bbops import (bbop_abs, bbop_add, bbop_and, bbop_bitcount, bbop_div,
 __all__ = [n for n in dir() if n.startswith("bbop") or n in
            ("compile_bbop", "planes_of", "values_of", "BitplaneArray",
             "simdram_pipeline", "use_backend", "set_default_backend",
-            "register_backend", "list_backends", "execute_program")]
+            "register_backend", "list_backends", "execute_program",
+            "PerfStats", "timed")]

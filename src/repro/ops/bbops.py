@@ -32,8 +32,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.backends import (execute_program, list_backends,  # noqa: F401
-                             set_default_backend, use_backend)
+from ..core.backends import (PerfStats, execute_program,  # noqa: F401
+                             list_backends, set_default_backend,
+                             use_backend)
+from ..core.backends import timed as timed_execution
 from ..core.circuits import compile_operation
 from ..core.uprogram import UProgram
 from ..simdram.layout import (LANE_WORD, BitplaneArray, from_bitplanes,
@@ -256,23 +258,59 @@ class simdram_pipeline(contextlib.AbstractContextManager):
     block through the unit); every intermediate stays a
     :class:`BitplaneArray`; ``store`` pays the single reverse pass.  The
     scope also pins the execution backend for every op inside it.
+
+    ``timed=True`` (or passing ``perf_stats``/``perf_model``) runs the chain
+    under the timed execution layer: every op charges its modeled μProgram
+    latency/energy, every inter-op operand relocation its MovementModel
+    cost, and the load/store passes their TranspositionModel cost.  The
+    accumulated :class:`~repro.core.backends.PerfStats` is ``p.stats`` and
+    :meth:`perf_report` renders it — modeled end-to-end DRAM nanoseconds,
+    nanojoules, and effective GOps/s per bank for the whole chain.
     """
 
-    def __init__(self, backend: str | None = None, banks: int | None = None):
+    def __init__(self, backend: str | None = None, banks: int | None = None,
+                 timed: bool = False, perf_stats: PerfStats | None = None,
+                 perf_model=None):
         self.backend = backend
         self.banks = banks
+        self.stats = perf_stats
+        self._timed = timed or perf_stats is not None or perf_model is not None
+        self._perf_model = perf_model
         self._ctx = None
+        self._tctx = None
 
     def __enter__(self):
         if self.backend is not None:
             self._ctx = use_backend(self.backend)
             self._ctx.__enter__()
+        if self._timed:
+            try:
+                self._tctx = timed_execution(stats=self.stats,
+                                             model=self._perf_model)
+                self.stats = self._tctx.__enter__()
+            except BaseException:
+                # __exit__ never runs when __enter__ raises — unwind the
+                # backend override here or it leaks process-wide
+                if self._ctx is not None:
+                    self._ctx.__exit__(None, None, None)
+                    self._ctx = None
+                raise
         return self
 
     def __exit__(self, *exc):
+        if self._tctx is not None:
+            self._tctx.__exit__(*exc)
         if self._ctx is not None:
             self._ctx.__exit__(*exc)
         return False
+
+    def perf_report(self) -> str:
+        """Render the accumulated modeled-DRAM cost of the chain."""
+        if self.stats is None:
+            raise ValueError(
+                "pipeline was not timed — construct it with timed=True "
+                "(or pass perf_stats=) to collect modeled DRAM cost")
+        return self.stats.report()
 
     def load(self, arrays, n_bits: int, signed: bool = False):
         """Horizontal array(s) → plane-resident, in one transposition pass.

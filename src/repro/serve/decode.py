@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..models.transformer import forward, init_cache_shapes
-from ..ops.bbops import bbop_greater, bbop_if_else, simdram_pipeline
+from ..ops.bbops import (PerfStats, bbop_greater, bbop_if_else,
+                         simdram_pipeline)
 
 
 def make_prefill(cfg: ModelConfig):
@@ -45,7 +46,8 @@ _MIN_LANES = 32          # one packed word — the tournament floor
 
 
 def simdram_argmax(values: jax.Array, n_bits: int = 8,
-                   backend: str | None = None) -> jax.Array:
+                   backend: str | None = None,
+                   perf_stats: PerfStats | None = None) -> jax.Array:
     """Row-wise argmax of unsigned ``values (B, V)`` via a plane-resident
     max tournament, one bank per row.
 
@@ -58,13 +60,19 @@ def simdram_argmax(values: jax.Array, n_bits: int = 8,
     are reduced on the host, like a warp-level epilogue: 4 transposition
     passes total regardless of V or round count.  Ties resolve to an
     arbitrary maximal index.
+
+    ``perf_stats`` runs the tournament under the timed execution layer,
+    accumulating modeled DRAM cost (latency, energy, transposition) into
+    the given :class:`~repro.core.backends.PerfStats` — pass one
+    accumulator across calls to meter a whole decode loop.
     """
     b, v = values.shape
     lanes = max(_MIN_LANES, 1 << (v - 1).bit_length())
     vals = jnp.pad(values.astype(jnp.uint32), ((0, 0), (0, lanes - v)))
     idx_bits = max(1, (lanes - 1).bit_length())
     idx = jnp.tile(jnp.arange(lanes, dtype=jnp.int32)[None, :], (b, 1))
-    with simdram_pipeline(banks=b, backend=backend) as p:
+    with simdram_pipeline(banks=b, backend=backend,
+                          perf_stats=perf_stats) as p:
         cur_v = p.load(vals, n_bits)
         cur_i = p.load(idx, idx_bits)
         while cur_v.words > _MIN_LANES // 32:
@@ -80,7 +88,8 @@ def simdram_argmax(values: jax.Array, n_bits: int = 8,
 
 
 def simdram_greedy_token(logits: jax.Array, n_bits: int = 8,
-                         backend: str | None = None) -> jax.Array:
+                         backend: str | None = None,
+                         perf_stats: PerfStats | None = None) -> jax.Array:
     """Greedy token per sequence, selected in-memory.
 
     Logits ``(B, V)`` are affinely quantized per row to ``n_bits`` unsigned
@@ -97,21 +106,26 @@ def simdram_greedy_token(logits: jax.Array, n_bits: int = 8,
     q = jnp.round((logits - lo) * scale)
     q = jnp.clip(jnp.where(finite, q, 0), 0, 2 ** n_bits - 1)
     return simdram_argmax(q.astype(jnp.int32), n_bits=n_bits,
-                          backend=backend)
+                          backend=backend, perf_stats=perf_stats)
 
 
 def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
                   max_seq: int | None = None, extra_batch: dict | None = None,
-                  sampler: str = "host", sampler_backend: str | None = None):
+                  sampler: str = "host", sampler_backend: str | None = None,
+                  sampler_perf: PerfStats | None = None):
     """e2e greedy decoding loop (examples/tests; single host).
 
     ``sampler="simdram"`` offloads greedy token selection to the
     bank-batched PuM tournament (:func:`simdram_greedy_token`); ``"host"``
-    is the plain ``jnp.argmax``.
+    is the plain ``jnp.argmax``.  ``sampler_perf`` accumulates the
+    tournament's modeled DRAM cost across every decoded token —
+    ``sampler_perf.total_ns / steps`` is the modeled sampling cost per
+    token.
     """
     if sampler == "simdram":
         def pick(logits):
-            return simdram_greedy_token(logits, backend=sampler_backend)
+            return simdram_greedy_token(logits, backend=sampler_backend,
+                                        perf_stats=sampler_perf)
     elif sampler == "host":
         def pick(logits):
             return jnp.argmax(logits, -1)

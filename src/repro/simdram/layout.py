@@ -32,6 +32,19 @@ LANE_WORD = 32  # lanes packed per uint32 word
 # streaming a block through the transposition unit)
 TRANSPOSE_STATS = {"to_bitplanes": 0, "from_bitplanes": 0}
 
+# perf-instrumentation hooks, called as hook(kind, n_bits, lanes) on every
+# transposition-unit pass; the timed execution layer in repro.core.backends
+# registers here so passes charge their TranspositionModel cost to the
+# active PerfStats (empty unless that module has been imported)
+_PERF_HOOKS: list = []
+
+
+def register_transpose_hook(hook) -> None:
+    """Register ``hook(kind: str, n_bits: int, lanes: int)`` to observe every
+    transposition-unit pass (``kind`` is "to" or "from")."""
+    if hook not in _PERF_HOOKS:
+        _PERF_HOOKS.append(hook)
+
 
 def reset_transpose_stats() -> None:
     TRANSPOSE_STATS["to_bitplanes"] = 0
@@ -52,6 +65,8 @@ def to_bitplanes(values: jax.Array, n_bits: int) -> jax.Array:
     (e,) = values.shape
     assert e % LANE_WORD == 0, "lane count must be a multiple of 32"
     TRANSPOSE_STATS["to_bitplanes"] += 1
+    for hook in _PERF_HOOKS:
+        hook("to", n_bits, e)
     u = values.astype(jnp.uint32)
     bits = (u[None, :] >> jnp.arange(n_bits, dtype=jnp.uint32)[:, None]) & 1
     bits = bits.reshape(n_bits, e // LANE_WORD, LANE_WORD)
@@ -64,6 +79,8 @@ def from_bitplanes(planes: jax.Array, signed: bool = False,
     """uint32[n_bits, W] → int array (32·W,)."""
     TRANSPOSE_STATS["from_bitplanes"] += 1
     n_bits, w = planes.shape
+    for hook in _PERF_HOOKS:
+        hook("from", n_bits, w * LANE_WORD)
     shifts = jnp.arange(LANE_WORD, dtype=jnp.uint32)
     bits = (planes[:, :, None] >> shifts) & 1          # (n_bits, W, 32)
     bits = bits.reshape(n_bits, w * LANE_WORD)

@@ -74,7 +74,9 @@ class BaselineModel:
 
     def throughput_gops(self, op: str, n_bits: int, gpu: bool = False) -> float:
         ins, outs = self.streams.get(op, self.streams["default"])
-        bytes_per_elem = (ins + outs) * (n_bits // 8)
+        # computed in bits: the paper evaluates arbitrary precisions, and
+        # ``n_bits // 8`` floors to 0 bytes for sub-byte elements
+        bytes_per_elem = (ins + outs) * n_bits / 8
         bw = self.gpu_bw_gbs if gpu else self.cpu_bw_gbs
         return bw / bytes_per_elem
 
@@ -107,7 +109,11 @@ class TranspositionModel:
     dram_ch_bw_gbs: float = 19.2         # one DDR4-2400 channel
 
     def first_subarray_ns(self, n_bits: int, lanes: int) -> float:
-        n_lines = n_bits * (lanes // self.cacheline_bits)
+        # ceiling division: a partial cache line still takes a full buffer
+        # pass and a full line write (flooring reported *zero* transposition
+        # cost for lanes < 512 and undercounted non-multiples)
+        lines_per_plane = -(-lanes // self.cacheline_bits)
+        n_lines = n_bits * lines_per_plane
         bytes_moved = n_lines * self.cacheline_bits / 8
         return n_lines * self.t_buffer_ns + bytes_moved / self.dram_ch_bw_gbs
 
@@ -117,10 +123,14 @@ class SimdramPerfModel:
 
     def __init__(self, timing: DRAMTiming | None = None,
                  energy: DRAMEnergy | None = None,
-                 baseline: BaselineModel | None = None) -> None:
+                 baseline: BaselineModel | None = None,
+                 movement: MovementModel | None = None,
+                 transposition: TranspositionModel | None = None) -> None:
         self.timing = timing or DRAMTiming()
         self.energy = energy or DRAMEnergy()
         self.baseline = baseline or BaselineModel()
+        self.movement = movement or MovementModel()
+        self.transposition = transposition or TranspositionModel()
 
     def latency_ns(self, prog: UProgram) -> float:
         mix = prog.command_mix()

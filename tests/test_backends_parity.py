@@ -95,6 +95,43 @@ def test_use_backend_scopes_default():
     assert backends.default_backend() == before
 
 
+def test_use_backend_keeps_inner_set_default():
+    """A set_default_backend made *inside* the scope must survive the exit,
+    not be silently rolled back to the at-entry default."""
+    from repro.core import backends
+    before = backends.default_backend()
+    try:
+        with use_backend("pallas"):
+            set_default_backend("reference")
+            assert backends.default_backend() == "reference"
+        assert backends.default_backend() == "reference"
+        # but an untouched scope still restores as before
+        with use_backend("pallas"):
+            pass
+        assert backends.default_backend() == "reference"
+    finally:
+        set_default_backend(before)
+
+
+def test_use_backend_keeps_pin_of_own_name():
+    """set_default_backend(<the scope's own backend>) — "make the current
+    scope's backend the process default" — must survive too; a name
+    comparison on exit cannot distinguish this from an untouched scope."""
+    from repro.core import backends
+    before = backends.default_backend()
+    try:
+        with use_backend("pallas"):
+            set_default_backend("pallas")
+        assert backends.default_backend() == "pallas"
+        # a set inside a *nested* scope also wins over every level
+        with use_backend("pallas"):
+            with use_backend("reference"):
+                set_default_backend("pallas")
+        assert backends.default_backend() == "pallas"
+    finally:
+        set_default_backend(before)
+
+
 def test_bbop_backend_kwarg():
     from repro.ops import bbop_add
     a = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)

@@ -1,0 +1,377 @@
+"""DRAM perf model golden values + the timed execution layer.
+
+Three layers of coverage:
+
+* golden-value tests for ``SimdramPerfModel.latency_ns`` / ``energy_nj`` /
+  ``throughput_gops`` on μPrograms with known command mixes (synthetic
+  streams with hand-counted AAP/AP/TRA, and Table-5 compiled ops);
+* the fixed edge cases: sub-byte baseline precisions (``n_bits < 8`` used
+  to raise ZeroDivisionError) and narrow-lane transposition (``lanes <
+  512`` used to report zero cost);
+* parity between a ``simdram_pipeline`` chain's PerfStats and a hand-summed
+  model of the same chain (μPrograms + movement + transposition) on every
+  backend, banked and unbanked — the acceptance criterion.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.backends import PerfStats, timed
+from repro.core.circuits import PAPER_COUNTS, compile_operation
+from repro.core.uprogram import AAP, AP, DRow, P_T0, P_T1, P_T2, P_T3, UProgram
+from repro.ops import (bbop_add, bbop_mul, bbop_relu, compile_bbop,
+                       simdram_pipeline)
+from repro.simdram.timing import (BaselineModel, SimdramPerfModel,
+                                  TranspositionModel)
+
+# hand-computed DDR4-2400 command-sequence latencies (paper Table 2 timing):
+#   AP  = tRAS + tRP        = 32.0 + 14.16
+#   AAP = 2·tRAS + tRP      = 64.0 + 14.16
+T_AP = 46.16
+T_AAP = 78.16
+# Micron-model activation energies: AAP = 2 activations, AP = triple-row
+E_AAP = 5.8 * 2
+E_AP = 5.8 * (1 + 2 * 0.22)
+ROW_LANES = 8 * 1024 * 8
+
+
+def _toy(n_aap: int, n_ap: int) -> UProgram:
+    """A μProgram whose command mix is exactly (n_aap AAPs, n_ap APs)."""
+    ops = [AAP(DRow("a", 0), (P_T0,))] * n_aap \
+        + [AP((P_T0, P_T1, P_T2))] * n_ap
+    return UProgram(name="toy", n_bits=4, prologue=ops, body=[],
+                    body_reps=0, inputs=("a",), outputs=("a",))
+
+
+# ---------------------------------------------------------------------------
+# Golden values: latency / energy / throughput
+# ---------------------------------------------------------------------------
+
+
+def test_latency_golden_synthetic():
+    m = SimdramPerfModel()
+    assert m.latency_ns(_toy(3, 2)) == pytest.approx(3 * T_AAP + 2 * T_AP)
+    assert m.latency_ns(_toy(0, 1)) == pytest.approx(T_AP)
+    assert m.latency_ns(_toy(1, 0)) == pytest.approx(T_AAP)
+
+
+def test_energy_golden_synthetic():
+    m = SimdramPerfModel()
+    # every AP is a TRA → extra_tra = 0
+    assert m.energy_nj(_toy(3, 2)) == pytest.approx(3 * E_AAP + 2 * E_AP)
+    # an AAP sourced from a triple performs the TRA on its first ACTIVATE:
+    # one AAP's energy plus the +22%-per-extra-row penalty for two rows
+    fused = UProgram(name="fused", n_bits=4,
+                     prologue=[AAP((P_T0, P_T1, P_T2), (P_T3,))],
+                     body=[], body_reps=0)
+    assert m.energy_nj(fused) == pytest.approx(E_AAP + 5.8 * 2 * 0.22)
+
+
+def test_throughput_golden_synthetic():
+    m = SimdramPerfModel()
+    prog = _toy(3, 2)
+    lat = 3 * T_AAP + 2 * T_AP
+    assert m.throughput_gops(prog, 1) == pytest.approx(ROW_LANES / lat)
+    assert m.throughput_gops(prog, 16) == pytest.approx(16 * ROW_LANES / lat)
+
+
+@pytest.mark.parametrize("op,n_bits", [
+    ("addition", 8), ("addition", 16), ("multiplication", 8),
+    ("relu", 8), ("greater", 8), ("if_else", 8), ("xor_reduction", 16),
+])
+def test_latency_matches_command_mix(op, n_bits):
+    """Compiled ops: latency = the command mix's summed AAP/AP sequence
+    latencies (the paper's §7 methodology), with mix ≡ Table-5 count."""
+    m = SimdramPerfModel()
+    prog = compile_operation(op, n_bits)
+    mix = prog.command_mix()
+    assert mix["AAP"] + mix["AP"] == prog.command_count()
+    assert m.latency_ns(prog) == pytest.approx(
+        mix["AAP"] * T_AAP + mix["AP"] * T_AP)
+    assert m.energy_nj(prog) > 0
+    assert m.power_w(prog) > 0
+
+
+def test_latency_golden_greater_closed_form():
+    """'greater' compiles to exactly the Table-5 count (3n+2, all AAPs or
+    APs) — its modeled latency is a fully closed-form golden value."""
+    m = SimdramPerfModel()
+    prog = compile_operation("greater", 8)
+    assert prog.command_count() == PAPER_COUNTS["greater"](8) == 26
+    mix = prog.command_mix()
+    assert m.latency_ns(prog) == pytest.approx(
+        mix["AAP"] * T_AAP + mix["AP"] * T_AP)
+    assert m.throughput_gops(prog, 16) == pytest.approx(
+        16 * ROW_LANES / m.latency_ns(prog))
+
+
+# ---------------------------------------------------------------------------
+# Fixed edge cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_bits", [1, 2, 4, 8, 32])
+def test_baseline_subbyte_precisions(n_bits):
+    """n_bits < 8 used to floor bytes_per_elem to 0 → ZeroDivisionError."""
+    b = BaselineModel()
+    cpu = b.throughput_gops("default", n_bits)
+    gpu = b.throughput_gops("default", n_bits, gpu=True)
+    assert cpu == pytest.approx(76.8 / (3 * n_bits / 8))
+    assert gpu == pytest.approx(652.8 / (3 * n_bits / 8))
+
+
+def test_baseline_stream_profile_in_bits():
+    b = BaselineModel()
+    # relu streams (1 in, 1 out): 2 × 4 bits = 1 byte per element
+    assert b.throughput_gops("relu", 4) == pytest.approx(76.8)
+    # byte multiples unchanged by the fix
+    assert b.throughput_gops("default", 32) == pytest.approx(76.8 / 12)
+
+
+def test_transposition_narrow_lanes_nonzero():
+    """lanes < cacheline_bits used to floor n_lines to 0 → zero cost."""
+    t = TranspositionModel()
+    # 8 planes × ⌈64/512⌉ = 8 lines; 512 B through buffer + channel
+    assert t.first_subarray_ns(8, 64) == pytest.approx(
+        8 * 0.25 + 8 * 64 / 19.2)
+    assert t.first_subarray_ns(1, 32) > 0
+
+
+def test_transposition_ceil_on_non_multiples():
+    t = TranspositionModel()
+    exact = t.first_subarray_ns(8, 512)
+    assert exact == pytest.approx(8 * 0.25 + 8 * 64 / 19.2)
+    # one extra lane ⇒ a whole extra line per plane
+    assert t.first_subarray_ns(8, 513) == pytest.approx(2 * exact)
+    assert t.first_subarray_ns(8, 1024) == pytest.approx(2 * exact)
+
+
+# ---------------------------------------------------------------------------
+# Timed execution layer: PerfStats vs a hand-summed model (acceptance)
+# ---------------------------------------------------------------------------
+
+RNG = np.random.default_rng(0xD1)
+N = 64
+CHAIN_OPS = ("multiplication", "addition", "relu")
+
+
+def _hand_chain_cost(banks: int):
+    """Model the relu(add(mul(a,b),c)) pipeline by hand: 3 μPrograms, 2
+    inter-op relocations of 8 result rows, 1 load pass (3 stacked operands)
+    + 1 store pass."""
+    m = SimdramPerfModel()
+    progs = [compile_bbop(op, 8) for op in CHAIN_OPS]
+    ns = sum(m.latency_ns(p) for p in progs)
+    nj = sum(m.energy_nj(p) for p in progs) * banks
+    ns += 2 * m.movement.intra_bank_ns(8)
+    ns += m.transposition.first_subarray_ns(8, 3 * banks * N)
+    ns += m.transposition.first_subarray_ns(8, banks * N)
+    return ns, nj
+
+
+@pytest.mark.parametrize("banks", [None, 2])
+@pytest.mark.parametrize("backend", ["unrolled", "pallas", "reference"])
+def test_pipeline_stats_match_hand_summed_model(backend, banks):
+    shape = (N,) if banks is None else (banks, N)
+    a, b, c = (jnp.asarray(RNG.integers(0, 256, shape), jnp.int32)
+               for _ in range(3))
+    with simdram_pipeline(backend=backend, banks=banks, timed=True) as p:
+        pa, pb, pc = p.load([a, b, c], 8)
+        res = p.store(bbop_relu(bbop_add(bbop_mul(pa, pb, 8), pc, 8), 8))
+    st = p.stats
+    exp_ns, exp_nj = _hand_chain_cost(banks or 1)
+    assert st.total_ns == pytest.approx(exp_ns, rel=1e-6)
+    assert st.total_nj == pytest.approx(exp_nj, rel=1e-6)
+    assert st.n_programs == 3 and st.n_moves == 2 and st.n_transposes == 2
+    assert st.max_banks == (banks or 1)
+    assert st.elem_ops == 3 * N * (banks or 1)
+    assert st.gops() == pytest.approx(st.elem_ops / exp_ns, rel=1e-6)
+    # the modeled cost must not perturb correctness
+    exp = ((np.asarray(a) * np.asarray(b)) & 255) + np.asarray(c) & 255
+    exp = np.where(exp & 0x80, 0, exp)
+    np.testing.assert_array_equal(np.asarray(res), exp)
+
+
+def test_per_op_breakdown_and_report():
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    with simdram_pipeline(timed=True) as p:
+        pa = p.load(a, 8)
+        p.store(bbop_add(bbop_add(pa, pa, 8), pa, 8))
+    st = p.stats
+    assert st.per_op["addition/8b"]["calls"] == 2
+    m = SimdramPerfModel()
+    assert st.per_op["addition/8b"]["ns"] == pytest.approx(
+        2 * m.latency_ns(compile_bbop("addition", 8)))
+    rep = p.perf_report()
+    assert "modeled DRAM cost" in rep and "addition/8b" in rep
+    assert f"{st.n_commands} command sequences" in rep
+
+
+def test_untimed_pipeline_has_no_stats():
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    with simdram_pipeline() as p:
+        pa = p.load(a, 8)
+        p.store(bbop_add(pa, pa, 8))
+    assert p.stats is None
+    with pytest.raises(ValueError, match="timed"):
+        p.perf_report()
+
+
+def test_timed_scope_unfused_roundtrips():
+    """Horizontal bbops inside a timed scope pay per-op transposition: two
+    operand coercions + one result store = 3 passes for one op."""
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    b = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    with timed() as st:
+        bbop_add(a, b, 8)
+    assert st.n_programs == 1 and st.n_transposes == 3 and st.n_moves == 0
+    m = SimdramPerfModel()
+    assert st.transpose_ns == pytest.approx(
+        3 * m.transposition.first_subarray_ns(8, N))
+
+
+def test_shared_stats_nested_scopes_charge_once():
+    """The same accumulator registered by nested scopes (the documented
+    decode-loop pattern) must charge once per event, not once per scope —
+    and the inner exit must not wipe the outer scope's movement tracking."""
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    st = PerfStats()
+    with timed(stats=st):
+        with simdram_pipeline(perf_stats=st) as p:
+            out = bbop_add(p.load(a, 8), a, 8)
+        assert st.n_programs == 1          # not 2
+        bbop_add(out, a, 8)                # out is still resident out here
+    assert st.n_programs == 2 and st.n_moves == 1
+    m = SimdramPerfModel()
+    assert st.exec_ns == pytest.approx(
+        2 * m.latency_ns(compile_bbop("addition", 8)))
+
+
+def test_resident_tracking_is_bounded():
+    from repro.core.backends import _RESIDENT_CAP
+    from repro.simdram.layout import BitplaneArray
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    with timed() as st:
+        pa = BitplaneArray.from_values(a, 8)
+        for _ in range(_RESIDENT_CAP + 10):
+            pa = bbop_add(pa, pa, 8)
+        assert len(st._resident) <= _RESIDENT_CAP
+
+
+def test_nested_timed_scopes_both_observe():
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    with timed() as outer:
+        with timed() as inner:
+            bbop_add(a, a, 8)
+        assert inner.n_programs == 1
+        bbop_add(a, a, 8)
+    assert outer.n_programs == 2 and inner.n_programs == 1
+
+
+def test_shared_stats_accumulate_and_movement_is_scoped():
+    """One accumulator across scopes keeps summing, but op outputs are only
+    'resident' (movement-charged) within their own scope."""
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    st = PerfStats()
+    with simdram_pipeline(perf_stats=st) as p:
+        out = bbop_add(p.load(a, 8), a, 8)
+    n1 = st.total_ns
+    assert n1 > 0
+    with simdram_pipeline(perf_stats=st) as p:
+        bbop_add(out, out, 8)          # prior scope's output: no relocation
+    assert st.total_ns > n1 and st.n_moves == 0 and st.n_programs == 2
+
+
+def test_timed_rejects_conflicting_stats_and_model():
+    """A shared accumulator charges with its own model; silently dropping a
+    different model= would report costs under the wrong timing."""
+    st = PerfStats()
+    with pytest.raises(ValueError, match="not both"):
+        with timed(stats=st, model=SimdramPerfModel()):
+            pass
+    # same model object is fine (no ambiguity)
+    with timed(stats=st, model=st.model):
+        pass
+    # a failing pipeline __enter__ must unwind its backend override too
+    from repro.core import backends
+    before = backends.default_backend()
+    with pytest.raises(ValueError, match="not both"):
+        with simdram_pipeline(backend="pallas", perf_stats=st,
+                              perf_model=SimdramPerfModel()):
+            pass
+    assert backends.default_backend() == before
+
+
+def test_stats_reset():
+    a = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    with timed() as st:
+        bbop_add(a, a, 8)
+    model = st.model
+    st.reset()
+    assert st.total_ns == 0 and st.n_programs == 0 and st.per_op == {}
+    assert st.model is model
+
+
+# ---------------------------------------------------------------------------
+# Serving layer: modeled cost per decoded token
+# ---------------------------------------------------------------------------
+
+
+def test_simdram_argmax_charges_perf_stats():
+    from repro.serve.decode import simdram_argmax
+    vals = np.stack([RNG.permutation(256)[:100] for _ in range(2)])
+    st = PerfStats()
+    got = np.asarray(simdram_argmax(jnp.asarray(vals), n_bits=8,
+                                    perf_stats=st))
+    np.testing.assert_array_equal(got, vals.argmax(-1))
+    # V=100 → 128 lanes → 2 halving rounds × (greater + 2 if_else)
+    assert st.n_programs == 6
+    assert st.n_transposes == 4          # 2 loads + 2 stores, always
+    assert st.max_banks == 2
+    m = SimdramPerfModel()
+    exp_exec = 2 * (m.latency_ns(compile_bbop("greater", 8))
+                    + m.latency_ns(compile_bbop("if_else", 8))
+                    + m.latency_ns(compile_bbop("if_else", 7)))
+    assert st.exec_ns == pytest.approx(exp_exec, rel=1e-6)
+
+
+def test_greedy_token_accumulates_across_calls():
+    from repro.serve.decode import simdram_greedy_token
+    logits = jnp.asarray(RNG.normal(size=(2, 64)).astype(np.float32))
+    logits = logits.at[0, 7].set(9.0).at[1, 42].set(9.0)
+    st = PerfStats()
+    for _ in range(3):
+        tok = simdram_greedy_token(logits, perf_stats=st)
+    np.testing.assert_array_equal(np.asarray(tok), [7, 42])
+    assert st.n_programs % 3 == 0 and st.n_programs > 0
+    per_token_ns = st.total_ns / 3
+    assert per_token_ns == pytest.approx(st.total_ns / 3)
+    assert per_token_ns > 0
+
+
+# ---------------------------------------------------------------------------
+# The --smoke gate helper
+# ---------------------------------------------------------------------------
+
+
+def _load_bench_common():
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).parent.parent / "benchmarks" / "common.py"
+    spec = importlib.util.spec_from_file_location("_bench_common", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_smoke_gate_flags_bad_rows():
+    bad_perf_values = _load_bench_common().bad_perf_values
+    good = "fig9live/add/8b,1.0,modeled_gops=0.1234 cpu_gops=25.60\n"
+    assert bad_perf_values(good) == []
+    assert bad_perf_values("x,0,modeled_gops=0.0000\n")
+    assert bad_perf_values("x,0,modeled_gops=nan\n")
+    assert bad_perf_values("x,0,rowscale16_gops=inf\n")
+    assert bad_perf_values("x,0,gops_per_w=oops\n")
+    # non-model keys are not gated
+    assert bad_perf_values("x,0,melems_per_s=0.00 speedup=0.00x\n") == []
