@@ -9,8 +9,20 @@ The ``fig9live``/``fig10live`` rows come from the *live* timed pipeline
 ``modeled_gops`` is the effective rate of the lanes actually engaged
 including transposition/movement overhead; ``rowscale16_gops`` rescales the
 same charged command stream to a full 8 kB row × 16 banks for the
-paper-comparable Fig. 9/10 speedup and efficiency columns."""
+paper-comparable Fig. 9/10 speedup and efficiency columns.
+
+Two gated sections ride along under ``--smoke``:
+
+* ``cache/…`` — compile/lower-cache hot-path speedup of an 8-op chained
+  pipeline (cold synthesis+allocation+lowering vs warm cache fetch) with
+  the hit/miss counters; the gate requires ``cache_hit_rate > 0``.
+* ``replay/…`` — cycle-accurate trace-replay latency vs the analytic
+  command-sum for every Table-5 op, and a replay-mode pipeline reporting
+  replayed vs analytic ns/nJ side by side; the gate requires
+  ``replay_ns ≥ analytic_ns`` on every row (replay can only add stalls)."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -114,6 +126,72 @@ def measured(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Compile/lower cache + trace-replay timing (gated under --smoke)
+# ---------------------------------------------------------------------------
+
+def cache_and_replay(smoke: bool = False) -> None:
+    from repro.core.trace import (clear_trace_cache, compile_trace,
+                                  trace_cache_stats)
+    from repro.ops import (bbop_abs, bbop_add, bbop_mul, bbop_relu, bbop_sub,
+                           simdram_pipeline)
+
+    n = 512 if smoke else 4096
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+
+    def chain8():
+        # 8 chained bbops (5 distinct μPrograms) — every call goes through
+        # the compile/lower cache, like a decode loop would
+        with simdram_pipeline() as p:
+            x, y = p.load([a, b], 8)
+            t = bbop_add(x, y, 8)
+            t = bbop_mul(t, x, 8)
+            t = bbop_sub(t, y, 8)
+            t = bbop_relu(t, 8)
+            t = bbop_add(t, x, 8)
+            t = bbop_abs(t, 8)
+            t = bbop_sub(t, x, 8)
+            t = bbop_relu(t, 8)
+            return _block(p.store(t))
+
+    clear_trace_cache()
+    t0 = time.perf_counter()
+    chain8()                              # cold: synthesis + alloc + lower
+    cold_us = (time.perf_counter() - t0) * 1e6
+    after_cold = trace_cache_stats()
+    _, warm_us = timed(chain8, repeat=2 if smoke else 3)
+    st = trace_cache_stats()
+    row(f"cache/chain8/n{n}", warm_us,
+        f"cold_us={cold_us:.1f} warm_us={warm_us:.1f} "
+        f"compile_speedup={cold_us / warm_us:.2f}x "
+        f"cache_hits={st['hits']} cache_misses={st['misses']} "
+        f"cache_hit_rate={st['hit_rate']:.3f} "
+        f"cold_misses={after_cold['misses']}")
+
+    # replay-mode pipeline: replayed vs analytic ns/nJ side by side
+    with simdram_pipeline(timed=True, model="replay") as p:
+        x, y = p.load([a, b], 8)
+        _block(p.store(bbop_relu(bbop_add(bbop_mul(x, y, 8), x, 8), 8)))
+    ps = p.stats
+    row(f"replaypipe/chain3/n{n}", 0,
+        f"replay_ns={ps.replay_ns:.1f} analytic_ns={ps.exec_ns:.1f} "
+        f"replay_nj={ps.replay_nj:.1f} analytic_nj={ps.exec_nj:.1f} "
+        f"stall_ns={ps.replay_stall_ns:.1f}")
+
+    # per-op trace replay vs the analytic command sum, every Table-5 op
+    m = SimdramPerfModel()
+    for op in ALL_OPS:
+        prog, trace = compile_trace(op, 8)
+        analytic = m.latency_ns(prog)
+        rep = m.replay_result(trace)
+        row(f"replay/{op}/8b", 0,
+            f"replay_ns={rep.ns:.2f} analytic_ns={analytic:.2f} "
+            f"stall_ns={rep.stall_ns:.2f} cycles={rep.cycles} "
+            f"acts={rep.n_acts}")
+
+
+# ---------------------------------------------------------------------------
 # Live Fig. 9/10-style rows: speedup/efficiency from the executed pipeline
 # ---------------------------------------------------------------------------
 
@@ -167,6 +245,7 @@ def live(smoke: bool = False) -> None:
 
 def main(smoke: bool = False) -> None:
     measured(smoke=smoke)
+    cache_and_replay(smoke=smoke)
     live(smoke=smoke)
     if smoke:
         return

@@ -41,3 +41,43 @@ def bad_perf_values(text: str) -> list[str]:
             if not math.isfinite(x) or x == 0:
                 bad.append(f"{key}={val} in: {line}")
     return bad
+
+
+_KV = re.compile(r"\b([A-Za-z0-9_]+)=([^\s,]+)")
+
+
+def bad_gate_rows(text: str) -> list[str]:
+    """The compile-cache and trace-replay ``--smoke`` gates.
+
+    * any ``cache_hit_rate=`` must be finite and > 0 — the chained-pipeline
+      benchmark must actually hit the compile/lower cache;
+    * any row carrying both ``replay_ns=`` and ``analytic_ns=`` must
+      satisfy finite ``replay_ns`` > 0 and ``replay_ns >= analytic_ns`` —
+      cycle-accurate replay can only *add* stall cycles to the analytic
+      command sum, so a smaller value means the FSM dropped work.
+    """
+    bad = []
+    for line in text.splitlines():
+        kv = dict(_KV.findall(line))
+
+        def num(key):
+            try:
+                return float(kv[key].rstrip("x"))
+            except ValueError:
+                return None
+
+        if "cache_hit_rate" in kv:
+            r = num("cache_hit_rate")
+            if r is None or not math.isfinite(r) or r <= 0:
+                bad.append(f"cache_hit_rate={kv['cache_hit_rate']} "
+                           f"(must be > 0) in: {line}")
+        if "replay_ns" in kv and "analytic_ns" in kv:
+            rep, ana = num("replay_ns"), num("analytic_ns")
+            if (rep is None or ana is None or not math.isfinite(rep)
+                    or not math.isfinite(ana) or rep <= 0 or ana <= 0
+                    or rep < ana):
+                bad.append(f"replay_ns={kv['replay_ns']} vs "
+                           f"analytic_ns={kv['analytic_ns']} (both must "
+                           f"be finite and non-zero, replay >= analytic) "
+                           f"in: {line}")
+    return bad

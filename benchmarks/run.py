@@ -4,10 +4,13 @@ table from the multi-pod dry-run artifacts).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9,table3,...]
 
-``--smoke`` additionally *gates* on the modeled-throughput rows: any
-``*gops*=`` value that is non-finite or zero fails the run (non-zero
-exit), so the nightly job catches perf-model regressions instead of
-printing garbage.
+``--smoke`` additionally *gates* on the modeled rows: any ``*gops*=``
+value that is non-finite or zero, a ``cache_hit_rate=`` that is not
+positive (the chained-pipeline benchmark must hit the compile/lower
+cache), or any ``replay_ns=`` below its row's ``analytic_ns=`` (trace
+replay can only add stall cycles) fails the run with a non-zero exit, so
+the nightly job catches perf-model regressions instead of printing
+garbage.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ from . import (bench_apps, bench_area, bench_data_movement,
                bench_dualitycache, bench_energy, bench_reliability,
                bench_roofline, bench_table5_counts, bench_throughput,
                bench_transposition)
-from .common import bad_perf_values
+from .common import bad_gate_rows, bad_perf_values
 
 BENCHES = {
     "table5": bench_table5_counts.main,      # Table 5  command counts
@@ -82,10 +85,11 @@ def main() -> None:
             failed.append(name)
             continue
         if args.smoke:
-            bad = bad_perf_values(captured.getvalue())
+            text = captured.getvalue()
+            bad = bad_perf_values(text) + bad_gate_rows(text)
             if bad:
-                print(f"{name}: non-finite/zero modeled-throughput rows:",
-                      file=sys.stderr)
+                print(f"{name}: bad modeled-throughput / cache / "
+                      f"replay rows:", file=sys.stderr)
                 for b in bad:
                     print(f"  {b}", file=sys.stderr)
                 failed.append(name)

@@ -1,38 +1,47 @@
 """Pluggable μProgram execution backends (the Step-3 seam).
 
-Every backend consumes the same compiled :class:`~repro.core.uprogram.UProgram`
-and the same plane-level operand format — ``name → uint32[n_bits, W]`` bit
-planes (optionally ``uint32[banks, n_bits, W]`` for the paper's multi-bank
-scaling) — and returns output planes.  Registered backends:
+Every ``execute_program`` call lowers its compiled
+:class:`~repro.core.uprogram.UProgram` (once, memoized) to the shared
+command-trace IR — :class:`~repro.core.trace.LoweredTrace` — and every
+backend consumes that same trace with the same plane-level operand format:
+``name → uint32[n_bits, W]`` bit planes (optionally
+``uint32[banks, n_bits, W]`` for the paper's multi-bank scaling).
+Registered backends:
 
-* ``reference`` — the faithful numpy :class:`~repro.core.executor.Subarray`
-  model: exact AAP/AP semantics, destructive TRAs, DCC ports.  The oracle.
-* ``unrolled``  — trace-time unrolled jnp dataflow
-  (:func:`repro.core.unrolled.run_unrolled`): copies vanish, constants fold;
-  the TPU-native fast path.  jit/vmap/shard-compatible.
+* ``reference`` — decodes the trace back to μOps and runs them on the
+  faithful numpy :class:`~repro.core.executor.Subarray` model: exact
+  AAP/AP semantics, destructive TRAs, DCC ports.  The oracle.
+* ``unrolled``  — scans the trace's command array at trace time into pure
+  jnp dataflow (:func:`repro.core.unrolled.run_trace_unrolled`): copies
+  vanish, constants fold; the TPU-native fast path.  jit/vmap-compatible.
 * ``pallas``    — the Fig.-7 control-unit FSM as a Pallas kernel
-  (:func:`repro.kernels.ops.run_uprogram_kernel`): encoded AAP/AP command
+  (:func:`repro.kernels.ops.run_trace_kernel`): the trace's int32 command
   stream driving a VMEM row file.  ``interpret=True`` runs it on CPU; on a
   real TPU the same kernel is the explicitly-tiled memory-traffic path.
 
 New substrates (real-DRAM timing models, GPU bit-slice engines, …) plug in
-with :func:`register_backend` and are immediately usable from every
-``bbop_*`` and from :class:`~repro.ops.bbops.simdram_pipeline` via
-``backend="name"``.
+with :func:`register_backend` — a ``BackendFn`` takes ``(trace, operands,
+out_bits=...)`` — and are immediately usable from every ``bbop_*`` and from
+:class:`~repro.ops.bbops.simdram_pipeline` via ``backend="name"``.
 
 Timed execution.  :func:`timed` opens a scope in which every
 :func:`execute_program` call — on *any* registered substrate — charges its
 modeled DRAM cost to a :class:`PerfStats` accumulator: μProgram command
 latency/energy from :class:`~repro.simdram.timing.SimdramPerfModel`,
-inter-op operand relocation from its ``MovementModel``, and every
-transposition-unit pass (``to_bitplanes``/``from_bitplanes``) from its
-``TranspositionModel``.  Charging is trace-level, like ``TRANSPOSE_STATS``:
-it reflects the command stream the chain *issues*, independent of which
-substrate executes it — that is the paper's §7 methodology (sum of AAP/AP
-command-sequence latencies), now reported per live pipeline instead of by a
-detached model.  This is also the seam a future real-DRAM timing backend
-plugs into: replace the analytic charge with measured cycles, keep the same
-accumulator surface.
+inter-op operand relocation from its ``MovementModel`` (intra-bank LISA
+hops, inter-bank RowClone-PSM transfers via the layout movement hooks),
+and every transposition-unit pass (``to_bitplanes``/``from_bitplanes``)
+from its ``TranspositionModel``.  Charging is trace-level, like
+``TRANSPOSE_STATS``: it reflects the command stream the chain *issues*,
+independent of which substrate executes it — the paper's §7 methodology
+(sum of AAP/AP command-sequence latencies), reported per live pipeline.
+
+``timed(mode="replay")`` (or ``simdram_pipeline(timed=True,
+model="replay")``) additionally replays every lowered trace on the
+cycle-accurate per-bank FSM
+(:class:`~repro.simdram.timing.TraceReplayTiming`) and accumulates the
+replayed ns/nJ next to the analytic ones — measured-style timing behind the
+same accumulator surface.
 """
 from __future__ import annotations
 
@@ -44,11 +53,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..simdram.layout import LANE_WORD, register_transpose_hook
+from ..simdram.layout import (LANE_WORD, register_movement_hook,
+                              register_transpose_hook)
 from ..simdram.timing import SimdramPerfModel
+from .trace import LoweredTrace, lower_program
 from .uprogram import UProgram
 
-# backend: (prog, operands: dict[str, uint32[n_bits, W]], out_bits) → outputs
+# backend: (trace, operands: dict[str, uint32[n_bits, W]], out_bits) → outputs
 BackendFn = Callable[..., dict]
 
 _REGISTRY: dict[str, BackendFn] = {}
@@ -132,21 +143,31 @@ _RESIDENT_CAP = 64
 class PerfStats:
     """Modeled-DRAM cost accumulator for a timed execution scope.
 
-    Three meters, all analytic (paper §7 methodology):
+    Three meters, analytic by default (paper §7 methodology):
 
     * ``exec_ns`` / ``exec_nj`` — per ``execute_program`` call, the
       μProgram's summed AAP/AP command-sequence latency and energy
       (:meth:`SimdramPerfModel.latency_ns` / ``energy_nj``).  Banks run the
       command stream in lockstep, so latency is charged once per call and
       energy × banks.
-    * ``movement_ns`` — per inter-op operand relocation: when an op consumes
-      another op's output planes directly, its ``n_bits`` result rows are
-      charged one intra-bank LISA hop each (``MovementModel``).  Plane-level
+    * movement — per in-DRAM operand relocation, broken out per kind: when
+      an op consumes another op's output planes directly, its ``n_bits``
+      result rows are charged one *intra-bank* LISA hop each
+      (``MovementModel.intra_bank_ns``); bank redistributions
+      (``BitplaneArray.rebank`` via the layout movement hooks) charge
+      *inter-bank* RowClone-PSM transfers (``inter_bank_ns``).  Plane-level
       rewrites (``flip_msb``/``split_lanes``/``astype_bits``) produce new
       arrays and are *not* tracked — they are free row re-indexing.
-    * ``transpose_ns`` — per transposition-unit pass inside the scope
-      (``TranspositionModel.first_subarray_ns`` of the pass's plane count
-      and lane width).
+    * transposition — per transposition-unit pass inside the scope
+      (``TranspositionModel.first_subarray_ns``), broken out per direction
+      (``to_bitplanes`` loads vs ``from_bitplanes`` stores).
+
+    With ``mode="replay"`` every executed trace is *additionally* replayed
+    on the cycle-accurate per-bank FSM
+    (:class:`~repro.simdram.timing.TraceReplayTiming`): ``replay_ns`` /
+    ``replay_nj`` accumulate next to the analytic meters (replay ≥ analytic
+    always — the FSM can only add stall cycles, and stalls burn background
+    power), so replayed-vs-analytic deltas are attributable per op.
 
     Charging is trace-level: under ``jit`` a charge lands once at trace
     time, like ``TRANSPOSE_STATS``.  Movement/transposition *energy* is not
@@ -156,14 +177,22 @@ class PerfStats:
 
     model: SimdramPerfModel = dataclasses.field(
         default_factory=SimdramPerfModel)
+    mode: str = "analytic"             # or "replay"
     exec_ns: float = 0.0
     exec_nj: float = 0.0
-    movement_ns: float = 0.0
-    transpose_ns: float = 0.0
+    replay_ns: float = 0.0
+    replay_nj: float = 0.0
+    replay_stall_ns: float = 0.0
+    movement_intra_ns: float = 0.0
+    movement_inter_ns: float = 0.0
+    transpose_to_ns: float = 0.0
+    transpose_from_ns: float = 0.0
     n_programs: int = 0
     n_commands: int = 0
-    n_moves: int = 0
-    n_transposes: int = 0
+    n_moves_intra: int = 0
+    n_moves_inter: int = 0
+    n_transposes_to: int = 0
+    n_transposes_from: int = 0
     elem_ops: int = 0
     max_banks: int = 1
     per_op: dict = dataclasses.field(default_factory=dict)
@@ -174,6 +203,13 @@ class PerfStats:
     # id(prog) → (latency_ns, energy_nj, n_commands, prog) — scoped to this
     # accumulator so cache entries die with it
     _prog_costs: dict = dataclasses.field(default_factory=dict, repr=False)
+    # id(trace) → (ReplayResult, trace), same lifetime rules
+    _replay_costs: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("analytic", "replay"):
+            raise ValueError(f"unknown timing mode {self.mode!r} "
+                             "(expected 'analytic' or 'replay')")
 
     def _prog_cost(self, prog: UProgram) -> tuple:
         hit = self._prog_costs.get(id(prog))
@@ -184,8 +220,16 @@ class PerfStats:
             self._prog_costs[id(prog)] = hit
         return hit
 
+    def _replay_cost(self, trace: LoweredTrace):
+        hit = self._replay_costs.get(id(trace))
+        if hit is None:
+            hit = (self.model.replay_result(trace), trace)
+            self._replay_costs[id(trace)] = hit
+        return hit[0]
+
     # -- charging (called by execute_program / the layout hooks) ------------
-    def charge_program(self, prog: UProgram, banks: int, lanes: int) -> None:
+    def charge_program(self, prog: UProgram, banks: int, lanes: int,
+                       trace: LoweredTrace | None = None) -> None:
         lat, en, cmds, _ = self._prog_cost(prog)
         self.exec_ns += lat
         self.exec_nj += en * banks
@@ -194,19 +238,40 @@ class PerfStats:
         self.elem_ops += lanes * banks
         self.max_banks = max(self.max_banks, banks)
         d = self.per_op.setdefault(f"{prog.name}/{prog.n_bits}b",
-                                   {"calls": 0, "ns": 0.0, "nj": 0.0})
+                                   {"calls": 0, "ns": 0.0, "nj": 0.0,
+                                    "replay_ns": 0.0})
         d["calls"] += 1
         d["ns"] += lat
         d["nj"] += en * banks
+        if self.mode == "replay" and trace is not None:
+            res = self._replay_cost(trace)
+            self.replay_ns += res.ns
+            self.replay_stall_ns += res.stall_ns
+            # activation energy is fixed by the command mix; stall cycles
+            # still burn per-bank background power (W × ns = nJ)
+            self.replay_nj += (en + self.model.energy.background_w
+                               * res.stall_ns) * banks
+            d["replay_ns"] += res.ns
 
-    def charge_movement(self, n_rows: int) -> None:
-        self.movement_ns += self.model.movement.intra_bank_ns(n_rows)
-        self.n_moves += 1
+    def charge_movement(self, n_rows: int, inter_bank: bool = False) -> None:
+        if inter_bank:
+            self.movement_inter_ns += self.model.movement.inter_bank_ns(
+                n_rows)
+            self.n_moves_inter += 1
+        else:
+            self.movement_intra_ns += self.model.movement.intra_bank_ns(
+                n_rows)
+            self.n_moves_intra += 1
 
-    def charge_transpose(self, n_bits: int, lanes: int) -> None:
-        self.transpose_ns += self.model.transposition.first_subarray_ns(
-            n_bits, lanes)
-        self.n_transposes += 1
+    def charge_transpose(self, n_bits: int, lanes: int,
+                         kind: str = "to") -> None:
+        ns = self.model.transposition.first_subarray_ns(n_bits, lanes)
+        if kind == "from":
+            self.transpose_from_ns += ns
+            self.n_transposes_from += 1
+        else:
+            self.transpose_to_ns += ns
+            self.n_transposes_to += 1
 
     def note_output(self, planes) -> None:
         """Track an op output for movement charging (FIFO-bounded)."""
@@ -214,7 +279,23 @@ class PerfStats:
         while len(self._resident) > _RESIDENT_CAP:
             del self._resident[next(iter(self._resident))]
 
-    # -- reporting ----------------------------------------------------------
+    # -- aggregates ---------------------------------------------------------
+    @property
+    def movement_ns(self) -> float:
+        return self.movement_intra_ns + self.movement_inter_ns
+
+    @property
+    def n_moves(self) -> int:
+        return self.n_moves_intra + self.n_moves_inter
+
+    @property
+    def transpose_ns(self) -> float:
+        return self.transpose_to_ns + self.transpose_from_ns
+
+    @property
+    def n_transposes(self) -> int:
+        return self.n_transposes_to + self.n_transposes_from
+
     @property
     def total_ns(self) -> float:
         return self.exec_ns + self.movement_ns + self.transpose_ns
@@ -222,6 +303,12 @@ class PerfStats:
     @property
     def total_nj(self) -> float:
         return self.exec_nj
+
+    @property
+    def replay_total_ns(self) -> float:
+        """Replayed end-to-end latency: FSM-replayed execution plus the
+        (mode-independent) movement/transposition charges."""
+        return self.replay_ns + self.movement_ns + self.transpose_ns
 
     def gops(self) -> float:
         """Effective element-ops per modeled nanosecond (= GOps/s), counting
@@ -232,9 +319,9 @@ class PerfStats:
         return self.gops() / max(1, self.max_banks)
 
     def reset(self) -> None:
-        fresh = PerfStats(model=self.model)
+        fresh = PerfStats(model=self.model, mode=self.mode)
         for f in dataclasses.fields(self):
-            if f.name != "model":
+            if f.name not in ("model", "mode"):
                 setattr(self, f.name, getattr(fresh, f.name))
 
     def report(self) -> str:
@@ -243,16 +330,33 @@ class PerfStats:
             f"{self.total_nj:.1f} nJ  ({self.n_programs} μPrograms, "
             f"{self.n_commands} command sequences, banks={self.max_banks})",
             f"  execute    {self.exec_ns:12.1f} ns  {self.exec_nj:10.1f} nJ",
+        ]
+        if self.mode == "replay":
+            lines.append(
+                f"  replayed   {self.replay_ns:12.1f} ns  "
+                f"{self.replay_nj:10.1f} nJ  "
+                f"(+{self.replay_stall_ns:.1f} ns stall vs analytic)")
+        lines += [
             f"  movement   {self.movement_ns:12.1f} ns  "
             f"({self.n_moves} relocations)",
+            f"    intra-bank LISA {self.movement_intra_ns:9.1f} ns  "
+            f"({self.n_moves_intra} hops)",
+            f"    inter-bank PSM  {self.movement_inter_ns:9.1f} ns  "
+            f"({self.n_moves_inter} transfers)",
             f"  transpose  {self.transpose_ns:12.1f} ns  "
             f"({self.n_transposes} passes)",
+            f"    to_bitplanes    {self.transpose_to_ns:9.1f} ns  "
+            f"({self.n_transposes_to} passes)",
+            f"    from_bitplanes  {self.transpose_from_ns:9.1f} ns  "
+            f"({self.n_transposes_from} passes)",
             f"  effective  {self.gops():.4f} GOps/s "
             f"({self.gops_per_bank():.4f} per bank)",
         ]
         for op, d in sorted(self.per_op.items()):
+            extra = (f" {d['replay_ns']:10.1f} ns replayed"
+                     if self.mode == "replay" else "")
             lines.append(f"    {op:<24} ×{d['calls']:<4} {d['ns']:10.1f} ns "
-                         f"{d['nj']:10.1f} nJ")
+                         f"{d['nj']:10.1f} nJ{extra}")
         return "\n".join(lines)
 
 
@@ -263,7 +367,7 @@ def active_stats() -> tuple["PerfStats", ...]:
 
 @contextlib.contextmanager
 def timed(backend: str | None = None, stats: PerfStats | None = None,
-          model: SimdramPerfModel | None = None):
+          model: SimdramPerfModel | None = None, mode: str | None = None):
     """Scoped timed execution: every ``execute_program`` call and every
     transposition-unit pass inside the scope charges its modeled DRAM cost.
 
@@ -273,7 +377,9 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
             out = bbop_add(a, b, 8)
         print(stats.report())
 
-    Pass an existing ``stats`` to keep accumulating across scopes (e.g. one
+    ``mode="replay"`` meters the cycle-accurate trace-replay substrate next
+    to the analytic model (``stats.replay_ns`` / ``replay_nj``).  Pass an
+    existing ``stats`` to keep accumulating across scopes (e.g. one
     accumulator for a whole decode loop); nested scopes each observe every
     charge.  Yields the :class:`PerfStats`.
     """
@@ -282,8 +388,12 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
             "pass either an existing stats accumulator (charged with its "
             "own model) or a model for a fresh one, not both — a shared "
             "accumulator cannot switch models mid-flight")
+    if stats is not None and mode is not None and stats.mode != mode:
+        raise ValueError(
+            f"stats accumulator runs in {stats.mode!r} mode; it cannot "
+            f"switch to {mode!r} mid-flight — pass a fresh accumulator")
     st = stats if stats is not None else PerfStats(
-        model=model or SimdramPerfModel())
+        model=model or SimdramPerfModel(), mode=mode or "analytic")
     ctx = use_backend(backend) if backend is not None \
         else contextlib.nullcontext()
     with ctx:
@@ -308,22 +418,31 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
 
 def _transpose_hook(kind: str, n_bits: int, lanes: int) -> None:
     for st in _ACTIVE_STATS:
-        st.charge_transpose(n_bits, lanes)
+        st.charge_transpose(n_bits, lanes, kind=kind)
+
+
+def _movement_hook(kind: str, n_rows: int) -> None:
+    for st in _ACTIVE_STATS:
+        st.charge_movement(n_rows, inter_bank=(kind == "inter"))
 
 
 register_transpose_hook(_transpose_hook)
+register_movement_hook(_movement_hook)
 
 
 def execute_program(prog: UProgram, operands: dict, out_bits=None,
                     backend: str | None = None) -> dict:
-    """Dispatch a μProgram to a backend; banked operands vmap over banks.
+    """Lower a μProgram to its command trace (memoized) and dispatch it to
+    a backend; banked operands vmap over banks.
 
     ``operands``: name → uint32[n_bits, W] or uint32[banks, n_bits, W];
     all operands must agree on bankedness.  Returns planes with a matching
     leading bank axis when the inputs were banked.  Inside a :func:`timed`
-    scope, the call charges its modeled DRAM cost before dispatch.
+    scope, the call charges its modeled DRAM cost before dispatch (and, in
+    replay mode, the FSM-replayed cost of the same trace).
     """
     fn = get_backend(backend)
+    trace = lower_program(prog)
     first = next(iter(operands.values()))
     banked = first.ndim == 3
     if banked and any(v.ndim != 3 for v in operands.values()):
@@ -332,19 +451,27 @@ def execute_program(prog: UProgram, operands: dict, out_bits=None,
     for st in _ACTIVE_STATS:
         for planes in operands.values():
             if id(planes) in st._resident:
+                # direct reuse of a prior op's output planes stays inside
+                # the bank: an intra-bank LISA relocation per result row.
+                # Inter-bank PSM traffic is charged where it actually
+                # happens — BitplaneArray.rebank via the layout movement
+                # hooks (bank layouts cannot silently change between an
+                # op's output and a consumer's operand; rebank creates a
+                # new array).
                 st.charge_movement(int(planes.shape[-2]))
-        st.charge_program(prog, banks, int(first.shape[-1]) * LANE_WORD)
+        st.charge_program(prog, banks, int(first.shape[-1]) * LANE_WORD,
+                          trace=trace)
     if banked:                   # bank axis: one subarray per bank
         if not getattr(fn, "jax_traceable", True):
             # non-traceable backends (numpy oracle) iterate banks instead
-            per = [fn(prog, {k: v[i] for k, v in operands.items()},
+            per = [fn(trace, {k: v[i] for k, v in operands.items()},
                       out_bits=out_bits) for i in range(banks)]
             outs = {k: jnp.stack([p[k] for p in per]) for k in per[0]}
         else:
-            outs = jax.vmap(lambda ops: fn(prog, ops, out_bits=out_bits)
+            outs = jax.vmap(lambda ops: fn(trace, ops, out_bits=out_bits)
                             )(operands)
     else:
-        outs = fn(prog, operands, out_bits=out_bits)
+        outs = fn(trace, operands, out_bits=out_bits)
     for st in _ACTIVE_STATS:
         for arr in outs.values():
             st.note_output(arr)
@@ -356,27 +483,34 @@ def execute_program(prog: UProgram, operands: dict, out_bits=None,
 # ---------------------------------------------------------------------------
 
 
-def _unrolled_execute(prog: UProgram, operands: dict, out_bits=None) -> dict:
-    from .unrolled import run_unrolled
-    return run_unrolled(prog, operands, out_bits=out_bits)
+def _unrolled_execute(trace: LoweredTrace, operands: dict,
+                      out_bits=None) -> dict:
+    from .unrolled import run_trace_unrolled
+    return run_trace_unrolled(trace, operands, out_bits=out_bits)
 
 
-def _pallas_execute(prog: UProgram, operands: dict, out_bits=None) -> dict:
-    from ..kernels.ops import run_uprogram_kernel
+def _pallas_execute(trace: LoweredTrace, operands: dict,
+                    out_bits=None) -> dict:
+    from ..kernels.ops import run_trace_kernel
     interpret = jax.default_backend() != "tpu"
-    return run_uprogram_kernel(prog, operands, out_bits=out_bits,
-                               interpret=interpret)
+    return run_trace_kernel(trace, operands, out_bits=out_bits,
+                            interpret=interpret)
 
 
-def _reference_execute(prog: UProgram, operands: dict, out_bits=None) -> dict:
+def _reference_execute(trace: LoweredTrace, operands: dict,
+                       out_bits=None) -> dict:
     """Planes → horizontal numpy values → faithful Subarray run → planes.
 
-    Conversions use the numpy layout twins (not the jnp transposition-unit
-    path) so reference execution never perturbs TRANSPOSE_STATS.
+    The trace is *decoded* back to μOps (:meth:`LoweredTrace.to_uprogram`)
+    and executed on the stateful Subarray — exercising the IR's round-trip
+    on every oracle run.  Conversions use the numpy layout twins (not the
+    jnp transposition-unit path) so reference execution never perturbs
+    TRANSPOSE_STATS.
     """
     from ..core.executor import from_planes, run_program
     from ..simdram.layout import LANE_WORD, np_from_bitplanes, np_to_bitplanes
 
+    prog = trace.to_uprogram()
     vals = {}
     lanes = None
     for name, planes in operands.items():

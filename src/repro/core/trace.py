@@ -1,0 +1,302 @@
+"""Lowered command-trace IR — the single form every substrate executes.
+
+The paper's control unit (Fig. 7) executes one thing: a linear stream of
+AAP/AP command sequences.  :class:`LoweredTrace` is that stream as data —
+an int32 command array plus the row-index map that binds symbolic row
+references (D rows, C rows, B-group cells) to physical row numbers — and is
+produced exactly once per compiled μProgram.  All registered backends
+consume it: the ``reference`` oracle decodes it back to μOps, ``unrolled``
+and ``pallas`` scan the command array directly, and the trace-replay timing
+substrate (:mod:`repro.simdram.timing`) replays it against per-bank DRAM
+timing state machines.
+
+Command encoding (int32[N, 4], shared with the Pallas FSM kernel in
+:mod:`repro.kernels.uprog_executor`)::
+
+    (op, a, b, c)
+    op = CMD_COPY (0): row|a| ← read(b)                               (AAP)
+    op = CMD_MAJ  (1): rows |a|,|b|,|c| ← MAJ(read(a),read(b),read(c)) (AP)
+
+Row operands are 1-based; a negative index reads/writes through a
+dual-contact cell's n-wordline (complement).  The C0/C1 constant rows are
+ordinary rows pre-filled with zeros/ones.
+
+Because a multi-destination AAP lowers to several COPY commands and a
+Case-2 fused AAP lowers to MAJ + COPY, the executable array alone cannot
+reproduce command-sequence structure (which both the Table-5 accounting and
+the DRAM timing FSM need: one AAP is one ACT-ACT-PRE regardless of how many
+destination rows its pair address covers).  ``seqs`` therefore records, per
+original command sequence, its kind and its span of command rows::
+
+    seqs int32[M, 3] = (kind, start, end)       # cmds[start:end]
+    kind = SEQ_AAP (0) | SEQ_AP (1) | SEQ_AAP_TRA (2, Case-2 fused)
+
+The module also owns the process-wide **compile/lower cache**: the paper's
+μProgram Memory holds the 16 compiled operations once, and
+:func:`compile_trace` mirrors it — synthesis, row allocation and lowering
+run once per ``(op, n_bits, optimize)`` and every later ``bbop_*`` call
+(including chained pipelines and ``greedy_decode`` sampling) fetches the
+finished trace.  Hit/miss counters are exposed for the benchmark gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .uprogram import (AAP, AP, C0, C1, CRow, DRow, N_B_CELLS, Port,
+                       UProgram, normalize_uop)
+
+# command opcodes (shared with the Pallas FSM kernel)
+CMD_COPY, CMD_MAJ = 0, 1
+# command-sequence kinds
+SEQ_AAP, SEQ_AP, SEQ_AAP_TRA = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# Encoding
+# ---------------------------------------------------------------------------
+
+
+def _encode_ref(ref, row_index: dict) -> int:
+    if isinstance(ref, Port):
+        base = row_index[("cell", ref.cell)]
+        return -base if ref.neg else base
+    if isinstance(ref, CRow):
+        return row_index["C1"] if ref.one else row_index["C0"]
+    if isinstance(ref, DRow):
+        return row_index[(ref.array, ref.bit)]
+    raise TypeError(ref)
+
+
+def encode_uops(uops, row_index: dict) -> tuple[np.ndarray, np.ndarray]:
+    """Flattened μOps → (cmds int32[N,4], seqs int32[M,3])."""
+    def tra_ports(ports) -> tuple:
+        # triple-row-activation addresses decode B-group μRegisters only
+        # (paper §3.1) — a clear error here beats a KeyError mid-encode
+        if not all(isinstance(p, Port) for p in ports):
+            raise TypeError(f"TRA operands must be B-group ports, got "
+                            f"{tuple(map(str, ports))}")
+        return tuple(_encode_ref(p, row_index) for p in ports)
+
+    cmds: list[tuple[int, int, int, int]] = []
+    seqs: list[tuple[int, int, int]] = []
+    for u in uops:
+        start = len(cmds)
+        if isinstance(u, AP):
+            a, b, c = tra_ports(u.ports)
+            cmds.append((CMD_MAJ, a, b, c))
+            kind = SEQ_AP
+        elif isinstance(u, AAP):
+            if isinstance(u.src, tuple):
+                a, b, c = tra_ports(u.src)
+                cmds.append((CMD_MAJ, a, b, c))
+                src = a
+                kind = SEQ_AAP_TRA
+            else:
+                src = _encode_ref(u.src, row_index)
+                kind = SEQ_AAP
+            for d in u.dsts:
+                cmds.append((CMD_COPY, _encode_ref(d, row_index), src, src))
+        else:
+            raise TypeError(u)
+        seqs.append((kind, start, len(cmds)))
+    return (np.asarray(cmds, np.int32).reshape(-1, 4),
+            np.asarray(seqs, np.int32).reshape(-1, 3))
+
+
+def _uop_drows(u) -> list[DRow]:
+    rows = []
+    if isinstance(u, AAP):
+        if isinstance(u.src, DRow):
+            rows.append(u.src)
+        rows.extend(d for d in u.dsts if isinstance(d, DRow))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoweredTrace:
+    """A μProgram lowered to the executable command-trace form.
+
+    ``row_index`` maps row keys to 1-based physical row numbers:
+    ``(array, bit)`` for D-group rows, ``("cell", c)`` for the six B-group
+    compute cells, and ``"C0"``/``"C1"`` for the constant rows.  ``d_rows``
+    lists the D-group keys in row order (operand loading).  Metadata
+    (``inputs``/``outputs``/``scratch``) is carried over from the source
+    μProgram so backends need nothing else.
+    """
+
+    name: str
+    n_bits: int
+    cmds: np.ndarray                       # int32[N, 4]
+    seqs: np.ndarray                       # int32[M, 3] (kind, start, end)
+    row_index: dict
+    d_rows: tuple
+    inputs: tuple = ()
+    outputs: tuple = ()
+    scratch: tuple = ()
+    _decoded: object = dataclasses.field(default=None, repr=False)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.row_index)
+
+    @property
+    def n_commands(self) -> int:
+        """Command *sequences* (the paper's Table-5 metric), not cmd rows."""
+        return int(self.seqs.shape[0])
+
+    def command_mix(self) -> dict:
+        """(n_AAP, n_AP, n_TRA) — identical to ``UProgram.command_mix``."""
+        kinds = self.seqs[:, 0]
+        n_ap = int((kinds == SEQ_AP).sum())
+        n_fused = int((kinds == SEQ_AAP_TRA).sum())
+        n_aap = int((kinds == SEQ_AAP).sum()) + n_fused
+        return {"AAP": n_aap, "AP": n_ap, "TRA": n_ap + n_fused}
+
+    def out_row_ids(self, name: str, n_bits: int) -> list[int]:
+        """0-based row indices holding bits 0..n_bits-1 of output ``name``
+        (missing bits resolve to the all-zeros C0 row)."""
+        c0 = self.row_index["C0"]
+        return [self.row_index.get((name, i), c0) - 1 for i in range(n_bits)]
+
+    # -- decoding ------------------------------------------------------------
+    def decode(self) -> list:
+        """Reconstruct the (normalized) μOp sequence this trace was lowered
+        from — the inverse of :func:`lower_program` up to
+        :func:`~repro.core.uprogram.normalize_uop` (the ``fixed``
+        loop-invariance mark on D rows names the same physical row and is
+        consumed by flattening, so it does not survive lowering)."""
+        inv = {idx: key for key, idx in self.row_index.items()}
+
+        def ref(code: int):
+            key = inv[abs(int(code))]
+            if key == "C0":
+                return C0
+            if key == "C1":
+                return C1
+            if isinstance(key, tuple) and key[0] == "cell":
+                return Port(key[1], neg=code < 0)
+            return DRow(key[0], key[1])
+
+        uops: list = []
+        for kind, start, end in self.seqs.tolist():
+            if kind == SEQ_AP:
+                uops.append(AP(tuple(ref(c) for c in self.cmds[start, 1:4])))
+            elif kind == SEQ_AAP_TRA:
+                src = tuple(ref(c) for c in self.cmds[start, 1:4])
+                dsts = tuple(ref(self.cmds[i, 1])
+                             for i in range(start + 1, end))
+                uops.append(AAP(src, dsts))
+            else:
+                src = ref(self.cmds[start, 2])
+                dsts = tuple(ref(self.cmds[i, 1]) for i in range(start, end))
+                uops.append(AAP(src, dsts))
+        return uops
+
+    def to_uprogram(self) -> UProgram:
+        """Decoded μOps re-wrapped as a flat μProgram (what the ``reference``
+        backend feeds the faithful ``Subarray`` executor); memoized, since
+        banked oracle runs decode once per bank otherwise."""
+        if self._decoded is None:
+            self._decoded = UProgram(
+                name=self.name, n_bits=self.n_bits, prologue=self.decode(),
+                body=[], epilogue=[], body_reps=0, inputs=self.inputs,
+                outputs=self.outputs, scratch=self.scratch)
+        return self._decoded
+
+
+# ---------------------------------------------------------------------------
+# Lowering (memoized per program object)
+# ---------------------------------------------------------------------------
+
+# id(prog) → (prog, trace); strong refs keep ids stable, FIFO-bounded so
+# ad-hoc programs (tests, experiments) cannot grow it without bound
+_LOWER_MEMO: dict[int, tuple[UProgram, "LoweredTrace"]] = {}
+_LOWER_MEMO_CAP = 256
+
+
+def lower_program(prog: UProgram) -> LoweredTrace:
+    """Lower a compiled μProgram to its command trace (once per object)."""
+    hit = _LOWER_MEMO.get(id(prog))
+    if hit is not None:
+        return hit[1]
+    flat = prog.flatten()
+    drows = sorted({(r.array, r.bit) for u in flat for r in _uop_drows(u)})
+    if any(arr == "cell" for arr, _ in drows):
+        raise ValueError('operand array name "cell" collides with the '
+                         "B-group row keys")
+    row_index: dict = {}
+    for key in drows:
+        row_index[key] = len(row_index) + 1
+    row_index["C0"] = len(row_index) + 1
+    row_index["C1"] = len(row_index) + 1
+    for cell in range(N_B_CELLS):
+        row_index[("cell", cell)] = len(row_index) + 1
+    cmds, seqs = encode_uops(flat, row_index)
+    trace = LoweredTrace(name=prog.name, n_bits=prog.n_bits, cmds=cmds,
+                         seqs=seqs, row_index=row_index,
+                         d_rows=tuple(drows), inputs=tuple(prog.inputs),
+                         outputs=tuple(prog.outputs),
+                         scratch=tuple(prog.scratch))
+    _LOWER_MEMO[id(prog)] = (prog, trace)
+    while len(_LOWER_MEMO) > _LOWER_MEMO_CAP:
+        del _LOWER_MEMO[next(iter(_LOWER_MEMO))]
+    return trace
+
+
+def canonical_uops(prog: UProgram) -> list:
+    """``prog.flatten()`` in the normal form lowering preserves (see
+    :meth:`LoweredTrace.decode`)."""
+    return [normalize_uop(u) for u in prog.flatten()]
+
+
+# ---------------------------------------------------------------------------
+# Process-wide compile/lower cache (the μProgram Memory)
+# ---------------------------------------------------------------------------
+
+_COMPILE_CACHE: dict[tuple, tuple[UProgram, LoweredTrace]] = {}
+_COMPILE_STATS = {"hits": 0, "misses": 0}
+
+
+def compile_trace(name: str, n_bits: int,
+                  optimize: bool = True) -> tuple[UProgram, LoweredTrace]:
+    """Compile + lower an operation once per ``(op, n_bits, optimize)``.
+
+    Returns the cached ``(UProgram, LoweredTrace)`` pair; synthesis, row
+    allocation and lowering never re-run for a cached key.
+    """
+    key = (name, int(n_bits), bool(optimize))
+    hit = _COMPILE_CACHE.get(key)
+    if hit is not None:
+        _COMPILE_STATS["hits"] += 1
+        return hit
+    _COMPILE_STATS["misses"] += 1
+    from .circuits import compile_operation
+    prog = compile_operation(name, n_bits, optimize=optimize)
+    entry = (prog, lower_program(prog))
+    _COMPILE_CACHE[key] = entry
+    return entry
+
+
+def trace_cache_stats() -> dict:
+    """{hits, misses, entries, hit_rate} of the compile/lower cache."""
+    h, m = _COMPILE_STATS["hits"], _COMPILE_STATS["misses"]
+    return {"hits": h, "misses": m, "entries": len(_COMPILE_CACHE),
+            "hit_rate": h / (h + m) if h + m else 0.0}
+
+
+def reset_trace_cache_stats() -> None:
+    _COMPILE_STATS["hits"] = _COMPILE_STATS["misses"] = 0
+
+
+def clear_trace_cache() -> None:
+    """Drop every cached compile (and the counters) — benchmarks use this to
+    measure a cold compile path."""
+    _COMPILE_CACHE.clear()
+    reset_trace_cache_stats()

@@ -63,6 +63,51 @@ class _Env:
             raise TypeError(ref)
 
 
+def run_trace_unrolled(trace, operands: dict[str, jax.Array],
+                       out_bits: dict[str, int] | None = None,
+                       ) -> dict[str, jax.Array]:
+    """Execute a :class:`~repro.core.trace.LoweredTrace` by scanning its
+    command array at trace time — the registered ``unrolled`` backend.
+
+    Semantically identical to :func:`run_unrolled` on the source μProgram
+    (COPY commands alias values, MAJ commands become bitwise majority,
+    negative row operands read/write complements through DCC ports), but
+    consumes the same lowered IR as the ``pallas`` FSM kernel and the
+    ``reference`` decoder instead of re-walking μOp dataclasses per call.
+    """
+    words = next(iter(operands.values())).shape[1]
+    zero = jnp.zeros((words,), jnp.uint32)
+    rows: list = [zero] * trace.n_rows
+    for key in trace.d_rows:
+        arr, bit = key
+        if arr in operands and bit < operands[arr].shape[0]:
+            rows[trace.row_index[key] - 1] = operands[arr][bit]
+    rows[trace.row_index["C1"] - 1] = jnp.full((words,), FULL)
+
+    def read(i: int):
+        v = rows[-i - 1 if i < 0 else i - 1]
+        return (~v).astype(jnp.uint32) if i < 0 else v
+
+    def write(i: int, val) -> None:
+        rows[-i - 1 if i < 0 else i - 1] = \
+            (~val).astype(jnp.uint32) if i < 0 else val
+
+    for op, a, b, c in trace.cmds.tolist():
+        if op == 1:                      # MAJ (AP / fused-AAP first activate)
+            res = _maj(read(a), read(b), read(c))
+            write(a, res)
+            write(b, res)
+            write(c, res)
+        else:                            # COPY (one AAP destination)
+            write(a, read(b))
+    out_bits = out_bits or {}
+    outs = {}
+    for name in trace.outputs:
+        nb = out_bits.get(name, trace.n_bits)
+        outs[name] = jnp.stack([rows[i] for i in trace.out_row_ids(name, nb)])
+    return outs
+
+
 def run_unrolled(prog: UProgram, operands: dict[str, jax.Array],
                  out_bits: dict[str, int] | None = None,
                  ) -> dict[str, jax.Array]:

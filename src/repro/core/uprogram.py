@@ -229,6 +229,23 @@ class UProgram:
         return "\n".join(lines)
 
 
+def normalize_uop(u: UOp):
+    """Canonical form of a *flattened* μOp: D-row references drop their
+    ``fixed`` loop-invariance mark.  ``fixed`` steers :func:`_shift_uop`
+    during flattening but names the same physical row afterwards, so the
+    lowered command-trace IR (``repro.core.trace``) cannot — and need not —
+    preserve it; round-trip comparisons go through this form."""
+    def n(r):
+        if isinstance(r, DRow) and r.fixed:
+            return DRow(r.array, r.bit)
+        return r
+
+    if isinstance(u, AAP):
+        src = u.src if isinstance(u.src, tuple) else n(u.src)
+        return AAP(src, tuple(n(d) for d in u.dsts))
+    return u
+
+
 def _shift_uop(u: UOp, i: int):
     """Rebase DRow bit offsets by the loop induction variable ``i``."""
     def sh(r):

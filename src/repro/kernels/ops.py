@@ -1,79 +1,67 @@
 """jit'd wrappers around the Pallas kernels (+ row-file plumbing).
 
-``run_uprogram_kernel`` is the end-to-end Pallas path for any compiled
-μProgram: build a row file (D rows + C rows + B cells), encode the command
-stream, execute in the VMEM kernel, read outputs back.  It is semantically
-identical to ``repro.core.unrolled.run_unrolled`` (the trace-time path) and
-``repro.core.executor`` (the numpy reference) — tests assert all three agree.
+``run_trace_kernel`` is the end-to-end Pallas path for any lowered
+command trace (:class:`~repro.core.trace.LoweredTrace`): build a row file
+(D rows + C rows + B cells) straight from the trace's row-index map, run
+its int32 command array in the VMEM FSM kernel, read outputs back.  It is
+semantically identical to ``repro.core.unrolled.run_trace_unrolled`` (the
+trace-time path) and the decoded ``repro.core.executor`` run (the numpy
+reference) — tests assert all three agree.  ``run_uprogram_kernel`` keeps
+the μProgram-level entry point by lowering first (memoized).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..core.uprogram import AAP, AP, DRow, UProgram
+from ..core.trace import LoweredTrace, lower_program
+from ..core.uprogram import UProgram
 from .bitplane_transpose import bitplane_transpose
 from .bitserial_matmul import bitserial_matmul, pack_signs
-from .uprog_executor import encode_program, uprog_execute
+from .uprog_executor import uprog_execute
 
 __all__ = ["bitplane_transpose", "bitserial_matmul", "pack_signs",
-           "run_uprogram_kernel", "transpose_to_planes"]
+           "run_trace_kernel", "run_uprogram_kernel", "transpose_to_planes"]
 
 
-def _program_drows(prog: UProgram):
-    rows = set()
-    for u in prog.flatten():
-        if isinstance(u, AAP):
-            if isinstance(u.src, DRow):
-                rows.add((u.src.array, u.src.bit))
-            for d in u.dsts:
-                if isinstance(d, DRow):
-                    rows.add((d.array, d.bit))
-    return sorted(rows)
+def run_trace_kernel(trace: LoweredTrace, operands: dict[str, jax.Array],
+                     out_bits: dict[str, int] | None = None,
+                     interpret: bool = True) -> dict[str, jax.Array]:
+    """Execute a lowered command trace via the Pallas row-file kernel.
+
+    operands: name → uint32[n_bits, W] bit-planes.
+    """
+    words = next(iter(operands.values())).shape[1]
+    zero = jnp.zeros((words,), jnp.uint32)
+    planes: list = [zero] * trace.n_rows
+    for key in trace.d_rows:
+        arr, bit = key
+        if arr in operands and bit < operands[arr].shape[0]:
+            planes[trace.row_index[key] - 1] = operands[arr][bit]
+    c1_row = trace.row_index["C1"] - 1
+    planes[c1_row] = jnp.full((words,), jnp.uint32(0xFFFFFFFF))
+    rows = jnp.stack(planes)
+    pad = (-words) % 128
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+        rows = rows.at[c1_row, words:].set(jnp.uint32(0xFFFFFFFF))
+    cmds = jnp.asarray(trace.cmds, jnp.int32)
+    final = uprog_execute(cmds, rows, interpret=interpret)
+    final = final[:, :words]
+    out_bits = out_bits or {}
+    outs = {}
+    for name in trace.outputs:
+        nb = out_bits.get(name, trace.n_bits)
+        outs[name] = final[jnp.array(trace.out_row_ids(name, nb))]
+    return outs
 
 
 def run_uprogram_kernel(prog: UProgram, operands: dict[str, jax.Array],
                         out_bits: dict[str, int] | None = None,
                         interpret: bool = True) -> dict[str, jax.Array]:
-    """Execute a μProgram via the Pallas row-file kernel.
-
-    operands: name → uint32[n_bits, W] bit-planes, W a multiple of 128.
-    """
-    words = next(iter(operands.values())).shape[1]
-    drows = _program_drows(prog)
-    index: dict = {}
-    planes = []
-
-    def add_row(key, data):
-        index[key] = len(planes) + 1   # 1-based
-        planes.append(data)
-
-    zero = jnp.zeros((words,), jnp.uint32)
-    for key in drows:
-        arr, bit = key
-        if arr in operands and bit < operands[arr].shape[0]:
-            add_row(key, operands[arr][bit])
-        else:
-            add_row(key, zero)
-    add_row("C0", zero)
-    add_row("C1", jnp.full((words,), jnp.uint32(0xFFFFFFFF)))
-    for cell in range(6):
-        add_row(("cell", cell), zero)
-    rows = jnp.stack(planes)
-    pad = (-words) % 128
-    if pad:
-        rows = jnp.pad(rows, ((0, 0), (0, pad)))
-        rows = rows.at[index["C1"] - 1, words:].set(jnp.uint32(0xFFFFFFFF))
-    cmds = encode_program(prog, index)
-    final = uprog_execute(cmds, rows, interpret=interpret)
-    final = final[:, :words]
-    out_bits = out_bits or {}
-    outs = {}
-    for name in prog.outputs:
-        nb = out_bits.get(name, prog.n_bits)
-        sel = [index.get((name, i), index["C0"]) - 1 for i in range(nb)]
-        outs[name] = final[jnp.array(sel)]
-    return outs
+    """μProgram-level entry: lower (memoized), then run the trace kernel."""
+    return run_trace_kernel(lower_program(prog), operands,
+                            out_bits=out_bits, interpret=interpret)
 
 
 def transpose_to_planes(x: jax.Array, n_bits: int,

@@ -93,38 +93,17 @@ def uprog_execute(cmds: jax.Array, rows: jax.Array,
 def encode_program(prog, row_index: dict) -> jax.Array:
     """Encode a flattened μProgram against a row-index map.
 
-    ``row_index`` maps RowRef keys to 1-based row numbers:
-      ('array', bit) for D rows, cell ints 0..5 for B cells, 'C1' for the
-      all-ones row; C0 reads as the reserved index 0.
+    ``row_index`` maps RowRef keys to 1-based row numbers: ('array', bit)
+    for D rows, ('cell', c) for B cells, 'C0'/'C1' for the constant rows.
     Multi-destination AAPs are split into one command per destination (same
     bitline value semantics); Case-2 fused AAPs emit MAJ + copy.
+
+    The encoding itself is owned by the command-trace IR
+    (:func:`repro.core.trace.encode_uops`); this wrapper only adapts it to
+    the kernel's jnp argument.  Prefer lowering once via
+    :func:`repro.core.trace.lower_program` and executing the cached
+    ``LoweredTrace``.
     """
-    from ..core.uprogram import AAP, AP, CRow, DRow, Port
-
-    def enc(ref) -> int:
-        if isinstance(ref, Port):
-            base = row_index[("cell", ref.cell)]
-            return -base if ref.neg else base
-        if isinstance(ref, CRow):
-            return row_index["C1"] if ref.one else row_index["C0"]
-        if isinstance(ref, DRow):
-            return row_index[(ref.array, ref.bit)]
-        raise TypeError(ref)
-
-    out = []
-    for u in prog.flatten():
-        if isinstance(u, AP):
-            a, b, c = (enc(p) for p in u.ports)
-            out.append((1, a, b, c))
-        elif isinstance(u, AAP):
-            if isinstance(u.src, tuple):
-                a, b, c = (enc(p) for p in u.src)
-                out.append((1, a, b, c))
-                src = enc(u.src[0])
-            else:
-                src = enc(u.src)
-            for d in u.dsts:
-                out.append((0, enc(d), src, src))
-        else:
-            raise TypeError(u)
-    return jnp.array(out, jnp.int32)
+    from ..core.trace import encode_uops
+    cmds, _ = encode_uops(prog.flatten(), row_index)
+    return jnp.asarray(cmds, jnp.int32)

@@ -27,7 +27,6 @@ paper's μProgram Memory/Scratchpad behavior.
 from __future__ import annotations
 
 import contextlib
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -36,16 +35,22 @@ from ..core.backends import (PerfStats, execute_program,  # noqa: F401
                              list_backends, set_default_backend,
                              use_backend)
 from ..core.backends import timed as timed_execution
-from ..core.circuits import compile_operation
+from ..core.trace import compile_trace
 from ..core.uprogram import UProgram
 from ..simdram.layout import (LANE_WORD, BitplaneArray, from_bitplanes,
                               to_bitplanes)
 
 
-@functools.lru_cache(maxsize=None)
 def compile_bbop(name: str, n_bits: int, optimize: bool = True) -> UProgram:
-    """The μProgram Scratchpad: compile once, reuse (paper Fig. 7)."""
-    return compile_operation(name, n_bits, optimize=optimize)
+    """The μProgram Scratchpad: compile + lower once, reuse (paper Fig. 7).
+
+    Backed by the process-wide compile/lower cache in
+    :mod:`repro.core.trace` — chained ``bbop_*`` calls, pipelines and
+    ``greedy_decode`` all fetch the same finished
+    (μProgram, :class:`~repro.core.trace.LoweredTrace`) pair instead of
+    re-running synthesis + row allocation per call.
+    """
+    return compile_trace(name, n_bits, optimize)[0]
 
 
 def planes_of(x: jax.Array, n_bits: int) -> tuple[jax.Array, int]:
@@ -266,16 +271,28 @@ class simdram_pipeline(contextlib.AbstractContextManager):
     accumulated :class:`~repro.core.backends.PerfStats` is ``p.stats`` and
     :meth:`perf_report` renders it — modeled end-to-end DRAM nanoseconds,
     nanojoules, and effective GOps/s per bank for the whole chain.
+
+    ``model="replay"`` additionally replays every executed command trace on
+    the cycle-accurate per-bank FSM
+    (:class:`~repro.simdram.timing.TraceReplayTiming`), so ``p.stats``
+    reports replayed and analytic ns/nJ side by side
+    (``replay_ns``/``replay_nj`` vs ``exec_ns``/``exec_nj``).
     """
 
     def __init__(self, backend: str | None = None, banks: int | None = None,
                  timed: bool = False, perf_stats: PerfStats | None = None,
-                 perf_model=None):
+                 perf_model=None, model: str | None = None):
+        if model is not None and not isinstance(model, str):
+            raise TypeError(
+                "model= selects the timing mode ('analytic' or 'replay'); "
+                "pass a SimdramPerfModel via perf_model=")
         self.backend = backend
         self.banks = banks
         self.stats = perf_stats
-        self._timed = timed or perf_stats is not None or perf_model is not None
+        self._timed = (timed or perf_stats is not None
+                       or perf_model is not None or model is not None)
         self._perf_model = perf_model
+        self._mode = model
         self._ctx = None
         self._tctx = None
 
@@ -286,7 +303,8 @@ class simdram_pipeline(contextlib.AbstractContextManager):
         if self._timed:
             try:
                 self._tctx = timed_execution(stats=self.stats,
-                                             model=self._perf_model)
+                                             model=self._perf_model,
+                                             mode=self._mode)
                 self.stats = self._tctx.__enter__()
             except BaseException:
                 # __exit__ never runs when __enter__ raises — unwind the

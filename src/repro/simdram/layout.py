@@ -46,6 +46,26 @@ def register_transpose_hook(hook) -> None:
         _PERF_HOOKS.append(hook)
 
 
+# in-DRAM data-movement hooks, called as hook(kind, n_rows) whenever rows
+# physically relocate ("intra" = LISA inter-subarray hop inside one bank,
+# "inter" = RowClone PSM transfer over the internal bus between banks);
+# the timed execution layer registers here so relocations charge the
+# active PerfStats through its MovementModel
+_MOVE_HOOKS: list = []
+
+
+def register_movement_hook(hook) -> None:
+    """Register ``hook(kind: str, n_rows: int)`` to observe in-DRAM row
+    relocations (``kind`` is "intra" or "inter")."""
+    if hook not in _MOVE_HOOKS:
+        _MOVE_HOOKS.append(hook)
+
+
+def _fire_movement(kind: str, n_rows: int) -> None:
+    for hook in _MOVE_HOOKS:
+        hook(kind, n_rows)
+
+
 def reset_transpose_stats() -> None:
     TRANSPOSE_STATS["to_bitplanes"] = 0
     TRANSPOSE_STATS["from_bitplanes"] = 0
@@ -208,6 +228,44 @@ class BitplaneArray:
         hi = dataclasses.replace(self, planes=self.planes[..., w // 2:],
                                  length=min(self.length, half_lanes))
         return lo, hi
+
+    def rebank(self, banks: int | None) -> "BitplaneArray":
+        """Redistribute the lane axis across DRAM banks (or gather it back).
+
+        ``rebank(k)`` scatters an unbanked array's lanes over ``k`` banks;
+        ``rebank(None)``/``rebank(1)`` gathers a banked array back into one
+        subarray.  Unlike the free plane-level rewrites above, this is real
+        in-DRAM traffic: every plane of every redistributed bank crosses the
+        internal bus as a RowClone PSM row transfer, so the movement hooks
+        fire with ``kind="inter"`` (× ``n_bits × banks`` rows) and a timed
+        scope charges ``MovementModel.inter_bank_ns``.  Requires a fully
+        padded array (``length == lanes``), which pipelines maintain at
+        word-aligned bank boundaries.
+        """
+        if banks in (None, 0, 1):
+            if not self.banked:
+                return self
+            # gather: each bank's plane stack rides the bus once
+            nb, n_bits, w = self.planes.shape
+            flat = self.planes.transpose(1, 0, 2).reshape(n_bits, nb * w)
+            _fire_movement("inter", n_bits * nb)
+            return BitplaneArray(flat, self.n_bits, nb * w * LANE_WORD,
+                                 self.signed)
+        if self.banked:
+            if banks == self.n_banks:
+                return self
+            return self.rebank(None).rebank(banks)
+        if self.length != self.words * LANE_WORD:
+            raise ValueError(
+                f"rebank needs a fully padded array (length {self.length} "
+                f"!= {self.words * LANE_WORD} lanes)")
+        if self.words % banks:
+            raise ValueError(f"{self.words} words do not split over "
+                             f"{banks} banks")
+        w = self.words // banks
+        planes = self.planes.reshape(self.n_bits, banks, w).transpose(1, 0, 2)
+        _fire_movement("inter", self.n_bits * banks)
+        return BitplaneArray(planes, self.n_bits, w * LANE_WORD, self.signed)
 
     def astype_bits(self, n_bits: int) -> "BitplaneArray":
         """Zero-extend or truncate the plane stack (free row re-indexing)."""

@@ -16,7 +16,9 @@ constants are documented here and surfaced in benchmark output.
 from __future__ import annotations
 
 import dataclasses
+import math
 
+from ..core.trace import SEQ_AP
 from ..core.uprogram import UProgram
 
 
@@ -118,6 +120,101 @@ class TranspositionModel:
         return n_lines * self.t_buffer_ns + bytes_moved / self.dram_ch_bw_gbs
 
 
+# ---------------------------------------------------------------------------
+# Trace-replay timing substrate (DRAMsim-style)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayResult:
+    """Outcome of replaying one lowered trace on the bank FSM."""
+    ns: float            # replayed latency (cycle-quantized, with stalls)
+    stall_ns: float      # replayed − analytic (≥ 0: replay only adds stalls)
+    cycles: int          # DRAM clock cycles consumed
+    n_seqs: int          # command sequences replayed
+    n_acts: int          # row activations issued
+
+
+class _BankFSM:
+    """Per-bank ACT/PRE state machine in DRAM clock cycles.
+
+    Tracks the two hazards the analytic per-command sum ignores: an ACT may
+    only issue tRP after the bank's last PRECHARGE and tRC after its last
+    ACTIVATE, and a PRECHARGE only tRAS after the row (or row group)
+    activated.  Within an AAP the back-to-back ACTIVATE follows the source
+    activation after tRAS (Ambit's command structure: the source row is
+    latched in the sense amplifiers before the destination wordline rises).
+    """
+
+    __slots__ = ("now", "last_act", "last_pre", "n_acts")
+
+    def __init__(self, c_rp: int, c_rc: int) -> None:
+        # the bank powers up idle and precharged
+        self.now = 0
+        self.last_act = -c_rc
+        self.last_pre = -c_rp
+        self.n_acts = 0
+
+    def activate(self, c_rp: int, c_rc: int) -> int:
+        t = max(self.now, self.last_pre + c_rp, self.last_act + c_rc)
+        self.last_act = t
+        self.n_acts += 1
+        return t
+
+    def activate_back_to_back(self, c_ras: int) -> int:
+        """Second ACTIVATE of an AAP: tRAS after the source activation."""
+        t = self.last_act + c_ras
+        self.last_act = t
+        self.n_acts += 1
+        return t
+
+    def precharge(self, c_ras: int) -> int:
+        t = self.last_act + c_ras
+        self.last_pre = t
+        self.now = t
+        return t
+
+
+class TraceReplayTiming:
+    """Cycle-accurate trace replay: every command sequence of a
+    :class:`~repro.core.trace.LoweredTrace` is issued to a per-bank FSM on
+    DRAM clock edges instead of being charged a flat analytic latency.
+
+    Commands issue on tCK boundaries, so each timing parameter rounds *up*
+    to whole cycles; combined with the FSM's ACT/PRE hazards this makes the
+    replayed latency a superset of the analytic sum — replay can only add
+    stall cycles, never remove work.  Banks run the command stream in
+    lockstep (the paper's control unit broadcasts one μOp stream), so one
+    FSM replays for all banks.
+    """
+
+    def __init__(self, timing: DRAMTiming | None = None) -> None:
+        self.timing = timing or DRAMTiming()
+        tck = self.timing.tCK_ns
+        self.c_ras = math.ceil(self.timing.tRAS_ns / tck)
+        self.c_rp = math.ceil(self.timing.tRP_ns / tck)
+        self.c_rc = self.c_ras + self.c_rp        # ACT→ACT, same bank
+
+    def replay(self, trace) -> ReplayResult:
+        c_ras, c_rp, c_rc = self.c_ras, self.c_rp, self.c_rc
+        bank = _BankFSM(c_rp, c_rc)
+        kinds = trace.seqs[:, 0].tolist()
+        for kind in kinds:
+            bank.activate(c_rp, c_rc)
+            if kind != SEQ_AP:                    # AAP / Case-2 fused AAP
+                bank.activate_back_to_back(c_ras)
+            bank.precharge(c_ras)
+        # the final precharge must complete before the op retires
+        cycles = bank.now + c_rp if kinds else 0
+        ns = cycles * self.timing.tCK_ns
+        mix = trace.command_mix()
+        analytic = (mix["AAP"] * self.timing.t_aap_ns
+                    + mix["AP"] * self.timing.t_ap_ns)
+        return ReplayResult(ns=ns, stall_ns=max(0.0, ns - analytic),
+                            cycles=cycles, n_seqs=len(kinds),
+                            n_acts=bank.n_acts)
+
+
 class SimdramPerfModel:
     """Throughput / energy for a compiled μProgram (the paper's Fig. 9/10)."""
 
@@ -125,12 +222,29 @@ class SimdramPerfModel:
                  energy: DRAMEnergy | None = None,
                  baseline: BaselineModel | None = None,
                  movement: MovementModel | None = None,
-                 transposition: TranspositionModel | None = None) -> None:
+                 transposition: TranspositionModel | None = None,
+                 replay: TraceReplayTiming | None = None) -> None:
         self.timing = timing or DRAMTiming()
         self.energy = energy or DRAMEnergy()
         self.baseline = baseline or BaselineModel()
         self.movement = movement or MovementModel()
         self.transposition = transposition or TranspositionModel()
+        self.replay_timing = replay or TraceReplayTiming(self.timing)
+
+    def replay_result(self, trace) -> ReplayResult:
+        """Replay a lowered trace on the bank FSM (measured-style latency)."""
+        return self.replay_timing.replay(trace)
+
+    def replay_latency_ns(self, trace) -> float:
+        return self.replay_result(trace).ns
+
+    def replay_energy_nj(self, prog: UProgram, trace) -> float:
+        """Replayed energy: the activation energy is fixed by the command
+        mix (identical to the analytic model), but stall cycles still burn
+        background/peripheral power — so replayed nJ ≥ analytic nJ by
+        exactly ``background_w × stall_ns``."""
+        return (self.energy_nj(prog)
+                + self.energy.background_w * self.replay_result(trace).stall_ns)
 
     def latency_ns(self, prog: UProgram) -> float:
         mix = prog.command_mix()

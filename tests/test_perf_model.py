@@ -375,3 +375,24 @@ def test_smoke_gate_flags_bad_rows():
     assert bad_perf_values("x,0,gops_per_w=oops\n")
     # non-model keys are not gated
     assert bad_perf_values("x,0,melems_per_s=0.00 speedup=0.00x\n") == []
+
+
+def test_smoke_gate_cache_and_replay_rows():
+    """The cache / replay gates: a zero hit rate or a replayed latency
+    below the analytic one must fail the --smoke run."""
+    bad_gate_rows = _load_bench_common().bad_gate_rows
+    good = ("cache/chain8/n512,1.0,compile_speedup=9.61x cache_hits=27 "
+            "cache_misses=5 cache_hit_rate=0.844\n"
+            "replay/addition/8b,0,replay_ns=4623.98 analytic_ns=4568.40\n")
+    assert bad_gate_rows(good) == []
+    assert bad_gate_rows("x,0,cache_hit_rate=0.000\n")
+    assert bad_gate_rows("x,0,cache_hit_rate=nan\n")
+    assert bad_gate_rows("x,0,replay_ns=10.0 analytic_ns=11.0\n")
+    assert bad_gate_rows("x,0,replay_ns=0.0 analytic_ns=0.0\n")
+    assert bad_gate_rows("x,0,replay_ns=inf analytic_ns=1.0\n")
+    assert bad_gate_rows("x,0,replay_ns=oops analytic_ns=1.0\n")
+    # a garbage *analytic* value must fail too, not slip past the ordering
+    assert bad_gate_rows("x,0,replay_ns=10.0 analytic_ns=nan\n")
+    assert bad_gate_rows("x,0,replay_ns=10.0 analytic_ns=0.0\n")
+    # analytic alone (e.g. a modeled row) is not gated
+    assert bad_gate_rows("x,0,analytic_ns=5.0\n") == []

@@ -1,0 +1,274 @@
+"""The lowered command-trace IR + compile/lower cache + trace-replay timing.
+
+Four layers of coverage:
+
+* **round-trip**: ``decode(lower(prog))`` reproduces the original μOp
+  sequence (modulo the ``fixed`` mark that flattening consumes) for every
+  Table-5 op at 4/8/16/32 bits, and the trace's command accounting is
+  bit-identical to the μProgram's;
+* **cache**: cached vs fresh compiles return identical traces, repeated
+  ``bbop_*`` calls hit the process-wide compile/lower cache;
+* **replay**: the per-bank FSM's replayed latency dominates the analytic
+  command sum on every op (cycle quantization + ACT/PRE hazards only add
+  stalls), with golden values for synthetic command streams, and
+  ``simdram_pipeline(timed=True, model="replay")`` reports finite non-zero
+  replayed ns/nJ ≥ analytic for every Table-5 op;
+* **movement**: ``BitplaneArray.rebank`` fires the inter-bank RowClone-PSM
+  movement hook and the report breaks movement/transposition out per kind.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.circuits import ALL_OPS, compile_operation
+from repro.core.trace import (canonical_uops, compile_trace, lower_program,
+                              trace_cache_stats)
+from repro.core.uprogram import (AAP, AP, DRow, P_T0, P_T1, P_T2, UProgram,
+                                 normalize_uop)
+from repro.ops import bbop_add, simdram_pipeline
+from repro.ops.bbops import planes_of
+from repro.core.backends import PerfStats, execute_program, timed
+from repro.simdram.timing import SimdramPerfModel, TraceReplayTiming
+
+RNG = np.random.default_rng(0xACE)
+WIDTHS = (4, 8, 16, 32)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: decode(lower(prog)) ≡ prog.flatten()
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+def test_decode_lower_roundtrip_all_widths(op):
+    for n in WIDTHS:
+        prog, trace = compile_trace(op, n)
+        assert trace.decode() == canonical_uops(prog), (op, n)
+        assert trace.command_mix() == prog.command_mix(), (op, n)
+        assert trace.n_commands == prog.command_count(), (op, n)
+        # re-lowering the decoded form is a fixpoint
+        relowered = lower_program(trace.to_uprogram())
+        np.testing.assert_array_equal(relowered.cmds, trace.cmds)
+        np.testing.assert_array_equal(relowered.seqs, trace.seqs)
+
+
+def test_lowering_rejects_tra_over_d_rows():
+    """TRA addresses decode B-group μRegisters only (paper §3.1); a
+    hand-written AP over a D row must fail loudly at lowering, not with a
+    KeyError mid-encode."""
+    bad = UProgram(name="bad", n_bits=1, prologue=[
+        AP((DRow("a", 0), P_T0, P_T1))], body=[], body_reps=0,
+        inputs=("a",), outputs=("a",))
+    with pytest.raises(TypeError, match="B-group ports"):
+        lower_program(bad)
+
+
+def test_roundtrip_preserves_multi_dst_and_fused_aaps():
+    prog = UProgram(name="synthetic", n_bits=2, prologue=[
+        AAP(DRow("a", 0), (P_T0, P_T1)),              # multi-row pair copy
+        AP((P_T0, P_T1, P_T2)),                       # plain TRA
+        AAP((P_T0, P_T1, P_T2), (DRow("out", 0),)),   # Case-2 fused
+    ], body=[], body_reps=0, inputs=("a",), outputs=("out",))
+    trace = lower_program(prog)
+    assert trace.decode() == [normalize_uop(u) for u in prog.flatten()]
+    # 3 sequences but 5 command rows (the pair AAP splits into 2 copies,
+    # the fused AAP into MAJ + copy)
+    assert trace.n_commands == 3 and trace.cmds.shape[0] == 5
+    assert trace.command_mix() == {"AAP": 2, "AP": 1, "TRA": 2}
+
+
+# ---------------------------------------------------------------------------
+# Compile/lower cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["addition", "multiplication", "greater",
+                                "xor_reduction", "abs"])
+def test_cached_vs_fresh_compiles_identical(op, n_bits=8):
+    """A cache hit must return exactly the trace a fresh synthesis +
+    allocation + lowering run would produce.  (The hypothesis sweep over
+    all ops × widths lives in test_trace_property.py.)"""
+    _, cached = compile_trace(op, n_bits)
+    fresh_prog = compile_operation(op, n_bits)       # bypasses the cache
+    fresh = lower_program(fresh_prog)
+    np.testing.assert_array_equal(cached.cmds, fresh.cmds)
+    np.testing.assert_array_equal(cached.seqs, fresh.seqs)
+    assert cached.row_index == fresh.row_index
+    assert (cached.name, cached.n_bits) == (fresh.name, fresh.n_bits)
+    assert fresh.decode() == canonical_uops(fresh_prog)
+
+
+def test_compile_cache_returns_same_objects_and_counts_hits():
+    before = trace_cache_stats()
+    p1, t1 = compile_trace("addition", 8)
+    p2, t2 = compile_trace("addition", 8)
+    assert p1 is p2 and t1 is t2
+    after = trace_cache_stats()
+    assert after["hits"] >= before["hits"] + 1
+    assert 0.0 <= after["hit_rate"] <= 1.0
+
+
+def test_bbop_calls_share_compile_cache():
+    a = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    bbop_add(a, a, 8)                  # ensure compiled once
+    before = trace_cache_stats()
+    for _ in range(3):
+        bbop_add(a, a, 8)
+    after = trace_cache_stats()
+    assert after["hits"] >= before["hits"] + 3
+    assert after["misses"] == before["misses"]
+
+
+# ---------------------------------------------------------------------------
+# Trace-replay timing substrate
+# ---------------------------------------------------------------------------
+
+
+def _toy(n_aap: int, n_ap: int) -> UProgram:
+    ops = [AAP(DRow("a", 0), (P_T0,))] * n_aap \
+        + [AP((P_T0, P_T1, P_T2))] * n_ap
+    return UProgram(name="toy", n_bits=4, prologue=ops, body=[],
+                    body_reps=0, inputs=("a",), outputs=("a",))
+
+
+def test_replay_golden_synthetic():
+    """DDR4-2400 cycle counts: tRAS → 39 cycles, tRP → 17, tCK = 0.833.
+    An AAP occupies 2·39+17 = 95 cycles, an AP 39+17 = 56."""
+    rt = TraceReplayTiming()
+    assert (rt.c_ras, rt.c_rp, rt.c_rc) == (39, 17, 56)
+    aap = rt.replay(lower_program(_toy(3, 0)))
+    assert aap.cycles == 3 * 95 and aap.n_seqs == 3 and aap.n_acts == 6
+    assert aap.ns == pytest.approx(3 * 95 * 0.833)
+    ap = rt.replay(lower_program(_toy(0, 2)))
+    assert ap.cycles == 2 * 56 and ap.n_acts == 2
+    mixed = rt.replay(lower_program(_toy(1, 1)))
+    assert mixed.cycles == 95 + 56
+    # quantization stall vs the analytic ns sum is small and non-negative
+    assert 0 <= aap.stall_ns < 3 * rt.timing.tCK_ns * 3
+
+
+def test_replay_empty_trace_is_zero():
+    rt = TraceReplayTiming()
+    res = rt.replay(lower_program(_toy(0, 0)))
+    assert res.ns == 0 and res.cycles == 0 and res.stall_ns == 0
+
+
+@pytest.mark.parametrize("n_bits", [8, 16])
+def test_replay_dominates_analytic_every_op(n_bits):
+    m = SimdramPerfModel()
+    for op in ALL_OPS:
+        prog, trace = compile_trace(op, n_bits)
+        rep = m.replay_result(trace)
+        ana = m.latency_ns(prog)
+        assert math.isfinite(rep.ns) and rep.ns > 0, op
+        assert rep.ns >= ana, (op, rep.ns, ana)
+        assert rep.stall_ns == pytest.approx(rep.ns - ana)
+        assert m.replay_energy_nj(prog, trace) >= m.energy_nj(prog)
+
+
+def test_timed_replay_pipeline_reports_side_by_side():
+    """Acceptance: simdram_pipeline(timed=True, model="replay") produces
+    finite, non-zero replayed ns/nJ ≥ the analytic model's, for every
+    Table-5 op."""
+    for op in ALL_OPS:
+        prog, trace = compile_trace(op, 8)
+        operands = {}
+        for name in dict.fromkeys(prog.inputs):
+            nb = 1 if name == "sel" else 8
+            vals = jnp.asarray(RNG.integers(0, 1 << nb, 64), jnp.int32)
+            operands[name], _ = planes_of(vals, nb)
+        with timed(mode="replay") as st:
+            execute_program(prog, operands)
+        assert st.mode == "replay"
+        assert math.isfinite(st.replay_ns) and st.replay_ns > 0, op
+        assert st.replay_ns >= st.exec_ns > 0, op
+        assert math.isfinite(st.replay_nj) and st.replay_nj > 0, op
+        assert st.replay_nj >= st.exec_nj > 0, op
+        assert st.per_op[f"{prog.name}/8b"]["replay_ns"] == pytest.approx(
+            st.replay_ns)
+
+
+def test_replay_mode_report_and_totals():
+    a = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    with simdram_pipeline(timed=True, model="replay") as p:
+        pa = p.load(a, 8)
+        p.store(bbop_add(bbop_add(pa, pa, 8), pa, 8))
+    st = p.stats
+    assert st.replay_total_ns >= st.total_ns
+    assert st.replay_total_ns == pytest.approx(
+        st.replay_ns + st.movement_ns + st.transpose_ns)
+    rep = p.perf_report()
+    assert "replayed" in rep and "stall vs analytic" in rep
+    assert "intra-bank LISA" in rep and "inter-bank PSM" in rep
+    assert "to_bitplanes" in rep and "from_bitplanes" in rep
+    assert "ns replayed" in rep          # per-op attribution line
+
+
+def test_timed_mode_conflicts_rejected():
+    with pytest.raises(ValueError, match="unknown timing mode"):
+        PerfStats(mode="warp-speed")
+    st = PerfStats()                      # analytic
+    with pytest.raises(ValueError, match="mid-flight"):
+        with timed(stats=st, mode="replay"):
+            pass
+    with pytest.raises(TypeError, match="timing mode"):
+        simdram_pipeline(timed=True, model=SimdramPerfModel())
+
+
+def test_analytic_mode_skips_replay_meters():
+    a = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    with timed() as st:
+        bbop_add(a, a, 8)
+    assert st.replay_ns == 0 and st.replay_nj == 0
+    assert "replayed" not in st.report()
+
+
+# ---------------------------------------------------------------------------
+# Inter-bank movement (RowClone PSM) via the layout hooks
+# ---------------------------------------------------------------------------
+
+
+def test_rebank_roundtrip_and_psm_charging():
+    from repro.simdram.layout import BitplaneArray
+    vals = jnp.asarray(RNG.integers(0, 256, 128), jnp.int32)
+    pa = BitplaneArray.from_values(vals, 8)
+    with timed() as st:
+        banked = pa.rebank(2)
+        assert banked.banked and banked.n_banks == 2
+        back = banked.rebank(None)
+    np.testing.assert_array_equal(np.asarray(back.to_values()),
+                                  np.asarray(vals))
+    m = SimdramPerfModel()
+    # scatter: 8 planes × 2 banks; gather: the same rows ride the bus back
+    assert st.n_moves_inter == 2 and st.n_moves_intra == 0
+    assert st.movement_inter_ns == pytest.approx(
+        2 * m.movement.inter_bank_ns(8 * 2))
+    assert st.movement_ns == st.movement_inter_ns
+
+
+def test_rebank_noop_and_validation():
+    from repro.simdram.layout import BitplaneArray
+    vals = jnp.asarray(RNG.integers(0, 256, 96), jnp.int32)
+    pa = BitplaneArray.from_values(vals, 8)
+    with timed() as st:
+        assert pa.rebank(None) is pa and pa.rebank(1) is pa
+    assert st.n_moves == 0
+    with pytest.raises(ValueError, match="split"):
+        pa.rebank(2)                      # 3 words don't split over 2 banks
+    short = BitplaneArray.from_values(vals[:90], 8)
+    with pytest.raises(ValueError, match="fully padded"):
+        short.rebank(3)
+
+
+def test_banked_execution_after_rebank_matches_unbanked():
+    from repro.simdram.layout import BitplaneArray
+    vals = jnp.asarray(RNG.integers(0, 256, 128), jnp.int32)
+    pa = BitplaneArray.from_values(vals, 8)
+    banked = pa.rebank(2)
+    from repro.ops import bbop_add as add
+    flat = np.asarray(add(pa, pa, 8).to_values())
+    split = np.asarray(add(banked, banked, 8).to_values()).reshape(-1)
+    np.testing.assert_array_equal(split, flat)
