@@ -17,9 +17,15 @@ Two gated sections ride along under ``--smoke``:
   pipeline (cold synthesis+allocation+lowering vs warm cache fetch) with
   the hit/miss counters; the gate requires ``cache_hit_rate > 0``.
 * ``replay/…`` — cycle-accurate trace-replay latency vs the analytic
-  command-sum for every Table-5 op, and a replay-mode pipeline reporting
-  replayed vs analytic ns/nJ side by side; the gate requires
-  ``replay_ns ≥ analytic_ns`` on every row (replay can only add stalls)."""
+  command-sum for every Table-5 op, three ways per row: the full
+  desynchronized per-bank model (tRRD/tFAW/refresh, ``replay_ns``), the
+  legacy lockstep broadcast FSM with refresh off (``lockstep_ns``), and
+  the analytic sum (``analytic_ns``); a refresh on-vs-off A/B row
+  (``refresh_on_ns``/``refresh_off_ns``); and replay-mode pipelines
+  (unbanked and banked) reporting replayed vs analytic ns/nJ side by
+  side.  The gates require ``replay_ns ≥ lockstep_ns ≥ analytic_ns`` and
+  ``refresh_on_ns ≥ refresh_off_ns`` on every row (desynchronization,
+  activation windows and refresh can only add stalls)."""
 from __future__ import annotations
 
 import time
@@ -30,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.circuits import ALL_OPS, compile_operation
-from repro.simdram.timing import SimdramPerfModel
+from repro.simdram.timing import DRAMTiming, SimdramPerfModel
 
 from .common import row, timed
 
@@ -179,16 +185,53 @@ def cache_and_replay(smoke: bool = False) -> None:
         f"replay_nj={ps.replay_nj:.1f} analytic_nj={ps.exec_nj:.1f} "
         f"stall_ns={ps.replay_stall_ns:.1f}")
 
-    # per-op trace replay vs the analytic command sum, every Table-5 op
-    m = SimdramPerfModel()
+    # banked replay-mode pipeline: the desynchronized per-bank streams
+    # (rank-coupled FSM array) with their per-bank stall breakdown
+    rbanks = 4
+    ab = jnp.asarray(rng.integers(0, 256, (rbanks, n)), jnp.int32)
+    bb = jnp.asarray(rng.integers(0, 256, (rbanks, n)), jnp.int32)
+    with simdram_pipeline(timed=True, model="replay", banks=rbanks) as p:
+        x, y = p.load([ab, bb], 8)
+        _block(p.store(bbop_relu(bbop_add(x, y, 8), 8)))
+    ps = p.stats
+    row(f"replaypipe/banked{rbanks}/n{n}", 0,
+        f"replay_ns={ps.replay_ns:.1f} analytic_ns={ps.exec_ns:.1f} "
+        f"tfaw_stall_ns={ps.replay_tfaw_ns:.1f} "
+        f"refresh_stall_ns={ps.replay_refresh_ns:.1f} "
+        f"bank_spread_ns={ps.replay_bank_spread_ns:.1f}")
+
+    # per-op trace replay, every Table-5 op: desynchronized per-bank model
+    # (tRRD/tFAW/refresh) vs the legacy lockstep broadcast FSM (refresh
+    # off) vs the analytic command sum.  The orderings are gated: each
+    # modeling layer can only add stalls.
+    banks = 8
+    m_full = SimdramPerfModel()
+    m_lock = SimdramPerfModel(timing=DRAMTiming(desync_policy="lockstep",
+                                                tREFI_ns=0.0))
+    reps = {}
     for op in ALL_OPS:
         prog, trace = compile_trace(op, 8)
-        analytic = m.latency_ns(prog)
-        rep = m.replay_result(trace)
+        analytic = m_full.latency_ns(prog)
+        rep = reps[op] = m_full.replay_result(trace, banks=banks)
+        lock = m_lock.replay_result(trace, banks=banks)
         row(f"replay/{op}/8b", 0,
-            f"replay_ns={rep.ns:.2f} analytic_ns={analytic:.2f} "
-            f"stall_ns={rep.stall_ns:.2f} cycles={rep.cycles} "
-            f"acts={rep.n_acts}")
+            f"replay_ns={rep.ns:.2f} lockstep_ns={lock.ns:.2f} "
+            f"analytic_ns={analytic:.2f} stall_ns={rep.stall_ns:.2f} "
+            f"tfaw_stall_ns={rep.tfaw_stall_ns:.2f} "
+            f"refresh_stall_ns={rep.refresh_stall_ns:.2f} "
+            f"bank_spread_ns={rep.bank_spread_ns:.2f} banks={banks} "
+            f"cycles={rep.cycles} acts={rep.n_acts}")
+
+    # refresh A/B on the longest Table-5 op: periodic tREFI/tRFC windows
+    # stall in-flight sequences, so refresh-on can only be slower
+    m_noref = SimdramPerfModel(timing=DRAMTiming(tREFI_ns=0.0))
+    _, trace = compile_trace("multiplication", 8)
+    on = reps["multiplication"]          # already replayed with m_full above
+    off = m_noref.replay_result(trace, banks=banks)
+    row("replay/refresh_ab/multiplication/8b", 0,
+        f"refresh_on_ns={on.ns:.2f} refresh_off_ns={off.ns:.2f} "
+        f"refresh_stall_ns={on.refresh_stall_ns:.2f} "
+        f"n_refresh_stalls={on.n_refresh_stalls}")
 
 
 # ---------------------------------------------------------------------------

@@ -51,11 +51,21 @@ def bad_gate_rows(text: str) -> list[str]:
 
     * any ``cache_hit_rate=`` must be finite and > 0 — the chained-pipeline
       benchmark must actually hit the compile/lower cache;
-    * any row carrying both ``replay_ns=`` and ``analytic_ns=`` must
-      satisfy finite ``replay_ns`` > 0 and ``replay_ns >= analytic_ns`` —
-      cycle-accurate replay can only *add* stall cycles to the analytic
-      command sum, so a smaller value means the FSM dropped work.
+    * ordered latency pairs must respect the modeling hierarchy — each
+      replay layer can only *add* stall cycles, so a smaller value means an
+      FSM dropped work: ``replay_ns >= analytic_ns`` (cycle quantization +
+      hazards), ``replay_ns >= lockstep_ns`` (rank-coupled desynchronized
+      streams vs the broadcast FSM), ``lockstep_ns >= analytic_ns``, and
+      ``refresh_on_ns >= refresh_off_ns`` (refresh windows only stall).
+      Both members of every present pair must be finite and non-zero.
     """
+    # (slower_key, faster_key, why) — slower >= faster, both finite > 0
+    orderings = (
+        ("replay_ns", "analytic_ns", "replay can only add stalls"),
+        ("replay_ns", "lockstep_ns", "desync can only add stalls"),
+        ("lockstep_ns", "analytic_ns", "lockstep replay can only add stalls"),
+        ("refresh_on_ns", "refresh_off_ns", "refresh can only add stalls"),
+    )
     bad = []
     for line in text.splitlines():
         kv = dict(_KV.findall(line))
@@ -71,13 +81,15 @@ def bad_gate_rows(text: str) -> list[str]:
             if r is None or not math.isfinite(r) or r <= 0:
                 bad.append(f"cache_hit_rate={kv['cache_hit_rate']} "
                            f"(must be > 0) in: {line}")
-        if "replay_ns" in kv and "analytic_ns" in kv:
-            rep, ana = num("replay_ns"), num("analytic_ns")
-            if (rep is None or ana is None or not math.isfinite(rep)
-                    or not math.isfinite(ana) or rep <= 0 or ana <= 0
-                    or rep < ana):
-                bad.append(f"replay_ns={kv['replay_ns']} vs "
-                           f"analytic_ns={kv['analytic_ns']} (both must "
-                           f"be finite and non-zero, replay >= analytic) "
-                           f"in: {line}")
+        for slow_key, fast_key, why in orderings:
+            if slow_key not in kv or fast_key not in kv:
+                continue
+            slow, fast = num(slow_key), num(fast_key)
+            if (slow is None or fast is None or not math.isfinite(slow)
+                    or not math.isfinite(fast) or slow <= 0 or fast <= 0
+                    or slow < fast):
+                bad.append(f"{slow_key}={kv[slow_key]} vs "
+                           f"{fast_key}={kv[fast_key]} (both must be "
+                           f"finite and non-zero, {slow_key} >= "
+                           f"{fast_key}: {why}) in: {line}")
     return bad

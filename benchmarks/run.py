@@ -7,10 +7,12 @@ table from the multi-pod dry-run artifacts).
 ``--smoke`` additionally *gates* on the modeled rows: any ``*gops*=``
 value that is non-finite or zero, a ``cache_hit_rate=`` that is not
 positive (the chained-pipeline benchmark must hit the compile/lower
-cache), or any ``replay_ns=`` below its row's ``analytic_ns=`` (trace
-replay can only add stall cycles) fails the run with a non-zero exit, so
-the nightly job catches perf-model regressions instead of printing
-garbage.
+cache), or any violated replay ordering — ``replay_ns >= lockstep_ns >=
+analytic_ns`` (desynchronized per-bank streams, the lockstep broadcast
+FSM and the analytic command sum can each only add stall cycles over the
+next) and ``refresh_on_ns >= refresh_off_ns`` — fails the run with a
+non-zero exit, so the nightly job catches perf-model regressions instead
+of printing garbage.
 """
 from __future__ import annotations
 

@@ -138,6 +138,12 @@ _ACTIVE_STATS: list["PerfStats"] = []
 # intermediate plane of a long timed region in memory
 _RESIDENT_CAP = 64
 
+# the per-accumulator μProgram/trace cost memos are bounded the same way:
+# a long-lived accumulator (e.g. one threaded through a whole decode
+# service) would otherwise pin every ad-hoc program and trace it ever
+# charged, forever, by id — FIFO-capped like _RESIDENT_CAP bounds _resident
+_COST_CAP = 256
+
 
 @dataclasses.dataclass
 class PerfStats:
@@ -163,11 +169,23 @@ class PerfStats:
       (``to_bitplanes`` loads vs ``from_bitplanes`` stores).
 
     With ``mode="replay"`` every executed trace is *additionally* replayed
-    on the cycle-accurate per-bank FSM
+    on the cycle-accurate per-bank FSM array
     (:class:`~repro.simdram.timing.TraceReplayTiming`): ``replay_ns`` /
     ``replay_nj`` accumulate next to the analytic meters (replay ≥ analytic
-    always — the FSM can only add stall cycles, and stalls burn background
-    power), so replayed-vs-analytic deltas are attributable per op.
+    always — the FSMs can only add stall cycles, and stalls burn background
+    power), so replayed-vs-analytic deltas are attributable per op.  The
+    replay runs one FSM per engaged bank under the rank-level constraints
+    the ``DRAMTiming`` enables (tRRD, the four-activate tFAW window,
+    tREFI/tRFC refresh windows; ``desync_policy="lockstep"`` restores the
+    legacy broadcast FSM), and the per-bank breakdown accumulates here:
+    ``replay_tfaw_ns`` / ``replay_refresh_ns`` attribute stall time to the
+    two rank mechanisms and ``replay_bank_spread_ns`` sums each op's
+    slowest-minus-fastest bank finish gap.  An inter-bank
+    ``BitplaneArray.rebank`` scatter serializes each bank's planes over
+    the internal bus, giving each bank a data-arrival skew; the layout
+    movement hook records it here *keyed to the scattered plane array*,
+    and the replayed op that consumes those planes issues each bank's
+    stream at that offset (consumed once).
 
     Charging is trace-level: under ``jit`` a charge lands once at trace
     time, like ``TRANSPOSE_STATS``.  Movement/transposition *energy* is not
@@ -183,6 +201,9 @@ class PerfStats:
     replay_ns: float = 0.0
     replay_nj: float = 0.0
     replay_stall_ns: float = 0.0
+    replay_tfaw_ns: float = 0.0        # stall attributed to the tFAW window
+    replay_refresh_ns: float = 0.0     # stall attributed to refresh windows
+    replay_bank_spread_ns: float = 0.0  # Σ per-op (max − min) bank finish
     movement_intra_ns: float = 0.0
     movement_inter_ns: float = 0.0
     transpose_to_ns: float = 0.0
@@ -201,10 +222,14 @@ class PerfStats:
     # _RESIDENT_CAP); consumed ids trigger movement charges
     _resident: dict = dataclasses.field(default_factory=dict, repr=False)
     # id(prog) → (latency_ns, energy_nj, n_commands, prog) — scoped to this
-    # accumulator so cache entries die with it
+    # accumulator so cache entries die with it, FIFO-bounded by _COST_CAP
     _prog_costs: dict = dataclasses.field(default_factory=dict, repr=False)
-    # id(trace) → (ReplayResult, trace), same lifetime rules
+    # (id(trace), banks, offsets) → (ReplayResult, trace), same bounds
     _replay_costs: dict = dataclasses.field(default_factory=dict, repr=False)
+    # id(planes) → (per-bank issue offsets, planes) for inter-bank scatters
+    # (data-arrival skew; strong refs keep ids stable, FIFO-bounded like
+    # _resident) — consumed by the op that consumes the scattered planes
+    _bank_skew: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
         if self.mode not in ("analytic", "replay"):
@@ -218,18 +243,25 @@ class PerfStats:
             hit = (self.model.latency_ns(prog), self.model.energy_nj(prog),
                    mix["AAP"] + mix["AP"], prog)
             self._prog_costs[id(prog)] = hit
+            while len(self._prog_costs) > _COST_CAP:
+                del self._prog_costs[next(iter(self._prog_costs))]
         return hit
 
-    def _replay_cost(self, trace: LoweredTrace):
-        hit = self._replay_costs.get(id(trace))
+    def _replay_cost(self, trace: LoweredTrace, banks: int, offsets):
+        key = (id(trace), banks, offsets)
+        hit = self._replay_costs.get(key)
         if hit is None:
-            hit = (self.model.replay_result(trace), trace)
-            self._replay_costs[id(trace)] = hit
+            hit = (self.model.replay_result(trace, banks=banks,
+                                            offsets_ns=offsets), trace)
+            self._replay_costs[key] = hit
+            while len(self._replay_costs) > _COST_CAP:
+                del self._replay_costs[next(iter(self._replay_costs))]
         return hit[0]
 
     # -- charging (called by execute_program / the layout hooks) ------------
     def charge_program(self, prog: UProgram, banks: int, lanes: int,
-                       trace: LoweredTrace | None = None) -> None:
+                       trace: LoweredTrace | None = None,
+                       offsets=None) -> None:
         lat, en, cmds, _ = self._prog_cost(prog)
         self.exec_ns += lat
         self.exec_nj += en * banks
@@ -244,13 +276,14 @@ class PerfStats:
         d["ns"] += lat
         d["nj"] += en * banks
         if self.mode == "replay" and trace is not None:
-            res = self._replay_cost(trace)
+            res = self._replay_cost(trace, banks, offsets)
             self.replay_ns += res.ns
             self.replay_stall_ns += res.stall_ns
-            # activation energy is fixed by the command mix; stall cycles
-            # still burn per-bank background power (W × ns = nJ)
-            self.replay_nj += (en + self.model.energy.background_w
-                               * res.stall_ns) * banks
+            self.replay_tfaw_ns += res.tfaw_stall_ns
+            self.replay_refresh_ns += res.refresh_stall_ns
+            self.replay_bank_spread_ns += res.bank_spread_ns
+            self.replay_nj += self.model.replay_energy_nj(
+                prog, trace, banks=banks, result=res)
             d["replay_ns"] += res.ns
 
     def charge_movement(self, n_rows: int, inter_bank: bool = False) -> None:
@@ -278,6 +311,28 @@ class PerfStats:
         self._resident[id(planes)] = planes
         while len(self._resident) > _RESIDENT_CAP:
             del self._resident[next(iter(self._resident))]
+
+    def note_bank_skew(self, banks: int, n_rows: int, planes) -> None:
+        """Record the per-bank data-arrival skew of an inter-bank scatter,
+        keyed to the scattered plane array: the redistributed rows ride the
+        shared internal bus serially, so bank *k*'s plane stack is complete
+        ``k × rows_per_bank × t_PSM`` after bank 0's.  The replayed program
+        that *consumes those planes* takes the skew as its per-bank issue
+        offsets (a one-shot: once the banks have executed an op they are
+        back in step up to the FSM's own desynchronization)."""
+        if self.mode != "replay" or banks <= 1 or planes is None:
+            return      # analytic accumulators never read offsets
+        per_bank_ns = self.model.movement.inter_bank_ns(n_rows) / banks
+        skew = tuple(k * per_bank_ns for k in range(banks))
+        self._bank_skew[id(planes)] = (skew, planes)
+        while len(self._bank_skew) > _RESIDENT_CAP:
+            del self._bank_skew[next(iter(self._bank_skew))]
+
+    def take_bank_skew(self, planes_id: int, banks: int):
+        """Consume the skew recorded for a scattered plane array (if its
+        bank count matches the consuming op's)."""
+        hit = self._bank_skew.pop(planes_id, None)
+        return hit[0] if hit is not None and len(hit[0]) == banks else None
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -332,10 +387,15 @@ class PerfStats:
             f"  execute    {self.exec_ns:12.1f} ns  {self.exec_nj:10.1f} nJ",
         ]
         if self.mode == "replay":
-            lines.append(
+            lines += [
                 f"  replayed   {self.replay_ns:12.1f} ns  "
                 f"{self.replay_nj:10.1f} nJ  "
-                f"(+{self.replay_stall_ns:.1f} ns stall vs analytic)")
+                f"(+{self.replay_stall_ns:.1f} ns stall vs analytic)",
+                f"    tFAW stalls     {self.replay_tfaw_ns:9.1f} ns   "
+                f"refresh stalls {self.replay_refresh_ns:9.1f} ns",
+                f"    bank finish spread {self.replay_bank_spread_ns:6.1f} ns"
+                f"  (Σ per-op slowest − fastest bank)",
+            ]
         lines += [
             f"  movement   {self.movement_ns:12.1f} ns  "
             f"({self.n_moves} relocations)",
@@ -378,10 +438,16 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
         print(stats.report())
 
     ``mode="replay"`` meters the cycle-accurate trace-replay substrate next
-    to the analytic model (``stats.replay_ns`` / ``replay_nj``).  Pass an
-    existing ``stats`` to keep accumulating across scopes (e.g. one
-    accumulator for a whole decode loop); nested scopes each observe every
-    charge.  Yields the :class:`PerfStats`.
+    to the analytic model (``stats.replay_ns`` / ``replay_nj``): one FSM
+    per engaged bank, coupled by the rank-level tRRD/tFAW activation
+    windows and tREFI/tRFC refresh windows of the model's ``DRAMTiming``
+    (disable with ``tFAW_ns=0`` / ``tREFI_ns=0``; ``desync_policy=
+    "lockstep"`` restores the legacy broadcast FSM).  The per-bank
+    breakdown lands in ``replay_tfaw_ns`` / ``replay_refresh_ns`` /
+    ``replay_bank_spread_ns`` and in ``report()``.  Pass an existing
+    ``stats`` to keep accumulating across scopes (e.g. one accumulator for
+    a whole decode loop); nested scopes each observe every charge.  Yields
+    the :class:`PerfStats`.
     """
     if stats is not None and model is not None and stats.model is not model:
         raise ValueError(
@@ -412,8 +478,10 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
                         break
                 # movement tracking is scoped: op outputs stop being
                 # "resident" (and their memory is released) when the
-                # accumulator's outermost scope closes
+                # accumulator's outermost scope closes; unconsumed scatter
+                # skew dies with the scope too
                 st._resident.clear()
+                st._bank_skew.clear()
 
 
 def _transpose_hook(kind: str, n_bits: int, lanes: int) -> None:
@@ -421,9 +489,14 @@ def _transpose_hook(kind: str, n_bits: int, lanes: int) -> None:
         st.charge_transpose(n_bits, lanes, kind=kind)
 
 
-def _movement_hook(kind: str, n_rows: int) -> None:
+def _movement_hook(kind: str, n_rows: int, banks: int | None = None,
+                   planes=None) -> None:
+    inter = kind == "inter"
     for st in _ACTIVE_STATS:
-        st.charge_movement(n_rows, inter_bank=(kind == "inter"))
+        st.charge_movement(n_rows, inter_bank=inter)
+        if inter and banks:
+            # scatter: the serialized bus transfer desynchronizes the banks
+            st.note_bank_skew(banks, n_rows, planes)
 
 
 register_transpose_hook(_transpose_hook)
@@ -449,6 +522,7 @@ def execute_program(prog: UProgram, operands: dict, out_bits=None,
         raise ValueError("banked execution needs every operand banked")
     banks = first.shape[0] if banked else 1
     for st in _ACTIVE_STATS:
+        offsets = None
         for planes in operands.values():
             if id(planes) in st._resident:
                 # direct reuse of a prior op's output planes stays inside
@@ -459,8 +533,15 @@ def execute_program(prog: UProgram, operands: dict, out_bits=None,
                 # op's output and a consumer's operand; rebank creates a
                 # new array).
                 st.charge_movement(int(planes.shape[-2]))
+            skew = st.take_bank_skew(id(planes), banks)
+            if skew is not None:
+                # this op consumes freshly scattered planes: its per-bank
+                # streams cannot start before each bank's data arrived
+                # (two scattered operands gate on the later arrival)
+                offsets = skew if offsets is None else tuple(
+                    max(a, b) for a, b in zip(offsets, skew))
         st.charge_program(prog, banks, int(first.shape[-1]) * LANE_WORD,
-                          trace=trace)
+                          trace=trace, offsets=offsets)
     if banked:                   # bank axis: one subarray per bank
         if not getattr(fn, "jax_traceable", True):
             # non-traceable backends (numpy oracle) iterate banks instead

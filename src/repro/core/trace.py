@@ -215,8 +215,10 @@ class LoweredTrace:
 # Lowering (memoized per program object)
 # ---------------------------------------------------------------------------
 
-# id(prog) → (prog, trace); strong refs keep ids stable, FIFO-bounded so
-# ad-hoc programs (tests, experiments) cannot grow it without bound
+# id(prog) → (prog, trace); strong refs keep ids stable, LRU-bounded (a
+# hit refreshes recency) so ad-hoc programs (tests, experiments) cannot
+# grow it without bound and a sustained mixed workload cannot evict its
+# hottest program first
 _LOWER_MEMO: dict[int, tuple[UProgram, "LoweredTrace"]] = {}
 _LOWER_MEMO_CAP = 256
 
@@ -225,6 +227,9 @@ def lower_program(prog: UProgram) -> LoweredTrace:
     """Lower a compiled μProgram to its command trace (once per object)."""
     hit = _LOWER_MEMO.get(id(prog))
     if hit is not None:
+        # LRU move-to-end: eviction order is recency, not insertion —
+        # FIFO evicted the hottest program first under mixed workloads
+        _LOWER_MEMO[id(prog)] = _LOWER_MEMO.pop(id(prog))
         return hit[1]
     flat = prog.flatten()
     drows = sorted({(r.array, r.bit) for u in flat for r in _uop_drows(u)})
@@ -297,6 +302,9 @@ def reset_trace_cache_stats() -> None:
 
 def clear_trace_cache() -> None:
     """Drop every cached compile (and the counters) — benchmarks use this to
-    measure a cold compile path."""
+    measure a cold compile path.  The lowering memo is dropped too: a
+    "cold compile" that still fetched memoized lowerings measured only cold
+    synthesis, not the genuinely cold compile-and-lower path."""
     _COMPILE_CACHE.clear()
+    _LOWER_MEMO.clear()
     reset_trace_cache_stats()

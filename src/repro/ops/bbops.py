@@ -273,10 +273,13 @@ class simdram_pipeline(contextlib.AbstractContextManager):
     nanojoules, and effective GOps/s per bank for the whole chain.
 
     ``model="replay"`` additionally replays every executed command trace on
-    the cycle-accurate per-bank FSM
-    (:class:`~repro.simdram.timing.TraceReplayTiming`), so ``p.stats``
-    reports replayed and analytic ns/nJ side by side
-    (``replay_ns``/``replay_nj`` vs ``exec_ns``/``exec_nj``).
+    the cycle-accurate per-bank FSM array
+    (:class:`~repro.simdram.timing.TraceReplayTiming`): one desynchronized
+    stream per engaged bank under the rank-level tRRD/tFAW activation
+    windows and tREFI/tRFC refresh windows, so ``p.stats`` reports replayed
+    and analytic ns/nJ side by side (``replay_ns``/``replay_nj`` vs
+    ``exec_ns``/``exec_nj``) plus the per-bank stall breakdown
+    (``replay_tfaw_ns``/``replay_refresh_ns``/``replay_bank_spread_ns``).
     """
 
     def __init__(self, backend: str | None = None, banks: int | None = None,

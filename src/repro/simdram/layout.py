@@ -46,24 +46,32 @@ def register_transpose_hook(hook) -> None:
         _PERF_HOOKS.append(hook)
 
 
-# in-DRAM data-movement hooks, called as hook(kind, n_rows) whenever rows
-# physically relocate ("intra" = LISA inter-subarray hop inside one bank,
-# "inter" = RowClone PSM transfer over the internal bus between banks);
-# the timed execution layer registers here so relocations charge the
-# active PerfStats through its MovementModel
+# in-DRAM data-movement hooks, called as hook(kind, n_rows, banks) whenever
+# rows physically relocate ("intra" = LISA inter-subarray hop inside one
+# bank, "inter" = RowClone PSM transfer over the internal bus between
+# banks); ``banks`` names the destination bank count of a scatter (None for
+# gathers and intra-bank hops).  The timed execution layer registers here
+# so relocations charge the active PerfStats through its MovementModel and
+# — because a scatter's rows ride the shared internal bus serially — so a
+# replay-mode accumulator can derive the per-bank data-arrival skew that
+# desynchronizes the next op's command streams.
 _MOVE_HOOKS: list = []
 
 
 def register_movement_hook(hook) -> None:
-    """Register ``hook(kind: str, n_rows: int)`` to observe in-DRAM row
-    relocations (``kind`` is "intra" or "inter")."""
+    """Register ``hook(kind: str, n_rows: int, banks: int | None, planes)``
+    to observe in-DRAM row relocations (``kind`` is "intra" or "inter";
+    ``banks`` is the destination bank count of an inter-bank scatter and
+    ``planes`` the scattered plane array — both None for gathers and
+    intra-bank hops)."""
     if hook not in _MOVE_HOOKS:
         _MOVE_HOOKS.append(hook)
 
 
-def _fire_movement(kind: str, n_rows: int) -> None:
+def _fire_movement(kind: str, n_rows: int, banks: int | None = None,
+                   planes=None) -> None:
     for hook in _MOVE_HOOKS:
-        hook(kind, n_rows)
+        hook(kind, n_rows, banks, planes)
 
 
 def reset_transpose_stats() -> None:
@@ -264,7 +272,12 @@ class BitplaneArray:
                              f"{banks} banks")
         w = self.words // banks
         planes = self.planes.reshape(self.n_bits, banks, w).transpose(1, 0, 2)
-        _fire_movement("inter", self.n_bits * banks)
+        # a scatter serializes each destination bank's plane stack over the
+        # shared internal bus, so later banks receive their data later —
+        # passing the scattered ``planes`` lets a replay-mode PerfStats
+        # record that per-bank arrival skew keyed to this array, so the op
+        # that actually consumes it replays at those issue offsets
+        _fire_movement("inter", self.n_bits * banks, banks, planes)
         return BitplaneArray(planes, self.n_bits, w * LANE_WORD, self.signed)
 
     def astype_bits(self, n_bits: int) -> "BitplaneArray":

@@ -24,13 +24,31 @@ from ..core.uprogram import UProgram
 
 @dataclasses.dataclass(frozen=True)
 class DRAMTiming:
-    """DDR4-2400 (per paper Table 2)."""
+    """DDR4-2400 (per paper Table 2).
+
+    Beyond the per-bank row-cycle parameters, the replay substrate obeys the
+    rank-level activation windows real chips enforce: ``tRRD`` (minimum gap
+    between ACTs to different banks of a rank), ``tFAW`` (at most four ACTs
+    per sliding window — the four-activate window), and periodic refresh
+    (one ``tRFC``-long all-bank refresh every ``tREFI``).  Set ``tFAW_ns=0``
+    / ``tRRD_ns=0`` to lift the activation windows and ``tREFI_ns=0`` to
+    disable refresh.  ``desync_policy`` selects how multi-bank replay runs:
+    ``"desync"`` (default) replays one FSM per bank with the rank windows
+    coupling them; ``"lockstep"`` replays the legacy single broadcast FSM
+    that assumes banks mirror each other for free (no tRRD/tFAW).
+    """
     tCK_ns: float = 0.833
     tRCD_ns: float = 14.16
     tRP_ns: float = 14.16
     tRAS_ns: float = 32.0
     row_bits: int = 8 * 1024 * 8          # 8 kB row = 65536 bitlines/SIMD lanes
     banks_per_chip: int = 16
+    # rank-level activation windows + refresh (DDR4-2400 x8 datasheet values)
+    tRRD_ns: float = 4.9                  # ACT→ACT, different banks (tRRD_L)
+    tFAW_ns: float = 30.0                 # four-activate window
+    tREFI_ns: float = 7812.5              # avg refresh interval (64 ms / 8192)
+    tRFC_ns: float = 350.0                # refresh cycle time (8 Gb die)
+    desync_policy: str = "desync"         # "desync" | "lockstep"
 
     # command-sequence latencies (Ambit/RowClone command structure):
     #   AP  = ACTIVATE(triple) → PRECHARGE                = tRAS + tRP
@@ -127,92 +145,221 @@ class TranspositionModel:
 
 @dataclasses.dataclass(frozen=True)
 class ReplayResult:
-    """Outcome of replaying one lowered trace on the bank FSM."""
+    """Outcome of replaying one lowered trace on the bank FSM array.
+
+    ``ns`` is the overall finish (the slowest bank); the per-bank breakdown
+    records how desynchronized the banks ended up (``max_bank_ns`` −
+    ``min_bank_ns``) and attributes stall time to the two rank-level
+    mechanisms: the four-activate window (``tfaw_stall_ns``) and refresh
+    windows (``refresh_stall_ns``).  Stall attributions are summed over
+    every issued command (per-bank streams) or over the broadcast timeline
+    (lockstep policy).
+    """
     ns: float            # replayed latency (cycle-quantized, with stalls)
     stall_ns: float      # replayed − analytic (≥ 0: replay only adds stalls)
-    cycles: int          # DRAM clock cycles consumed
-    n_seqs: int          # command sequences replayed
-    n_acts: int          # row activations issued
+    cycles: int          # DRAM clock cycles consumed (slowest bank)
+    n_seqs: int          # command sequences replayed (all banks)
+    n_acts: int          # row activations issued (all banks)
+    banks: int = 1
+    max_bank_ns: float = 0.0      # slowest bank's finish time (== ns)
+    min_bank_ns: float = 0.0      # fastest bank's finish time
+    tfaw_stall_ns: float = 0.0    # ACTs deferred by the four-activate window
+    refresh_stall_ns: float = 0.0  # ACTs deferred by refresh windows
+    n_refresh_stalls: int = 0     # ACT issues pushed past a refresh window
+
+    @property
+    def bank_spread_ns(self) -> float:
+        """Finish-time spread between the slowest and fastest bank."""
+        return self.max_bank_ns - self.min_bank_ns
 
 
-class _BankFSM:
-    """Per-bank ACT/PRE state machine in DRAM clock cycles.
+class _RankState:
+    """Rank-level issue constraints shared by every bank FSM of a rank.
 
-    Tracks the two hazards the analytic per-command sum ignores: an ACT may
-    only issue tRP after the bank's last PRECHARGE and tRC after its last
-    ACTIVATE, and a PRECHARGE only tRAS after the row (or row group)
-    activated.  Within an AAP the back-to-back ACTIVATE follows the source
-    activation after tRAS (Ambit's command structure: the source row is
-    latched in the sense amplifiers before the destination wordline rises).
+    Tracks the three mechanisms the per-bank FSMs cannot see alone: the
+    minimum ACT→ACT gap across banks (tRRD), the sliding four-activate
+    window (tFAW — at most four ACTs per window), and periodic refresh
+    (ACTs may not issue inside ``[k·tREFI, k·tREFI + tRFC)``).  All three
+    only ever *delay* an ACT, so replay latency remains a superset of the
+    analytic command sum.
     """
 
-    __slots__ = ("now", "last_act", "last_pre", "n_acts")
+    __slots__ = ("c_rrd", "c_faw", "c_refi", "c_rfc", "last_act", "acts",
+                 "tfaw_stall", "refresh_stall", "n_refresh_stalls")
 
-    def __init__(self, c_rp: int, c_rc: int) -> None:
-        # the bank powers up idle and precharged
-        self.now = 0
-        self.last_act = -c_rc
-        self.last_pre = -c_rp
-        self.n_acts = 0
+    def __init__(self, c_rrd: int, c_faw: int, c_refi: int,
+                 c_rfc: int) -> None:
+        self.c_rrd = c_rrd
+        self.c_faw = c_faw
+        self.c_refi = c_refi
+        self.c_rfc = c_rfc
+        self.last_act: int | None = None
+        self.acts: list[int] = []          # issue cycles of the last 4 ACTs
+        self.tfaw_stall = 0
+        self.refresh_stall = 0
+        self.n_refresh_stalls = 0
 
-    def activate(self, c_rp: int, c_rc: int) -> int:
-        t = max(self.now, self.last_pre + c_rp, self.last_act + c_rc)
+    def constrain(self, t: int) -> int:
+        """Earliest cycle ≥ ``t`` at which one more ACT may issue."""
+        if self.c_rrd and self.last_act is not None:
+            t = max(t, self.last_act + self.c_rrd)
+        if self.c_faw and len(self.acts) == 4:
+            gate = self.acts[0] + self.c_faw
+            if gate > t:
+                self.tfaw_stall += gate - t
+                t = gate
+        if self.c_refi:
+            k = t // self.c_refi
+            if k >= 1 and t < k * self.c_refi + self.c_rfc:
+                end = k * self.c_refi + self.c_rfc
+                self.refresh_stall += end - t
+                self.n_refresh_stalls += 1
+                t = end
+        return t
+
+    def record(self, t: int) -> None:
         self.last_act = t
-        self.n_acts += 1
-        return t
-
-    def activate_back_to_back(self, c_ras: int) -> int:
-        """Second ACTIVATE of an AAP: tRAS after the source activation."""
-        t = self.last_act + c_ras
-        self.last_act = t
-        self.n_acts += 1
-        return t
-
-    def precharge(self, c_ras: int) -> int:
-        t = self.last_act + c_ras
-        self.last_pre = t
-        self.now = t
-        return t
+        self.acts.append(t)
+        if len(self.acts) > 4:
+            del self.acts[0]
 
 
 class TraceReplayTiming:
     """Cycle-accurate trace replay: every command sequence of a
-    :class:`~repro.core.trace.LoweredTrace` is issued to a per-bank FSM on
-    DRAM clock edges instead of being charged a flat analytic latency.
+    :class:`~repro.core.trace.LoweredTrace` is issued to an array of
+    per-bank ACT/PRE state machines on DRAM clock edges instead of being
+    charged a flat analytic latency.
+
+    Each bank FSM tracks the hazards the analytic per-command sum ignores:
+    an ACT may only issue tRP after the bank's last PRECHARGE and tRC after
+    its last ACTIVATE, and a PRECHARGE only tRAS after the row (or row
+    group) activated; within an AAP the back-to-back ACTIVATE follows the
+    source activation after tRAS (Ambit's command structure).  Banks of a
+    rank are additionally coupled by the shared :class:`_RankState` — tRRD
+    between ACTs to different banks, the four-activate tFAW window, and
+    periodic tREFI/tRFC refresh windows that stall in-flight sequences —
+    and each bank may start at its own issue offset (``offsets_ns``, e.g.
+    the data-arrival skew of a preceding inter-bank redistribution).
 
     Commands issue on tCK boundaries, so each timing parameter rounds *up*
-    to whole cycles; combined with the FSM's ACT/PRE hazards this makes the
-    replayed latency a superset of the analytic sum — replay can only add
-    stall cycles, never remove work.  Banks run the command stream in
-    lockstep (the paper's control unit broadcasts one μOp stream), so one
-    FSM replays for all banks.
+    to whole cycles; quantization, hazards, rank windows and offsets only
+    ever *delay* commands, so the replayed latency is a superset of the
+    analytic sum on every policy.  ``desync_policy="lockstep"`` restores
+    the legacy broadcast model (one FSM replays for all banks, no
+    tRRD/tFAW coupling) for A/B comparison.
     """
 
     def __init__(self, timing: DRAMTiming | None = None) -> None:
         self.timing = timing or DRAMTiming()
-        tck = self.timing.tCK_ns
-        self.c_ras = math.ceil(self.timing.tRAS_ns / tck)
-        self.c_rp = math.ceil(self.timing.tRP_ns / tck)
+        t = self.timing
+        tck = t.tCK_ns
+        self.c_ras = math.ceil(t.tRAS_ns / tck)
+        self.c_rp = math.ceil(t.tRP_ns / tck)
         self.c_rc = self.c_ras + self.c_rp        # ACT→ACT, same bank
+        self.c_rrd = math.ceil(t.tRRD_ns / tck) if t.tRRD_ns > 0 else 0
+        self.c_faw = math.ceil(t.tFAW_ns / tck) if t.tFAW_ns > 0 else 0
+        refresh_on = t.tREFI_ns > 0 and t.tRFC_ns > 0
+        self.c_refi = math.ceil(t.tREFI_ns / tck) if refresh_on else 0
+        self.c_rfc = math.ceil(t.tRFC_ns / tck) if refresh_on else 0
+        if self.c_refi and self.c_rfc >= self.c_refi:
+            raise ValueError(
+                f"tRFC ({t.tRFC_ns} ns) must be shorter than tREFI "
+                f"({t.tREFI_ns} ns) — the bank would never leave refresh")
+        if t.desync_policy not in ("desync", "lockstep"):
+            raise ValueError(f"unknown desync policy {t.desync_policy!r} "
+                             "(expected 'desync' or 'lockstep')")
 
-    def replay(self, trace) -> ReplayResult:
-        c_ras, c_rp, c_rc = self.c_ras, self.c_rp, self.c_rc
-        bank = _BankFSM(c_rp, c_rc)
+    def _rank(self, coupled: bool) -> _RankState:
+        return _RankState(self.c_rrd if coupled else 0,
+                          self.c_faw if coupled else 0,
+                          self.c_refi, self.c_rfc)
+
+    def replay(self, trace, banks: int = 1, offsets_ns=None,
+               policy: str | None = None) -> ReplayResult:
+        """Replay ``trace`` on ``banks`` per-bank FSMs.
+
+        ``offsets_ns`` optionally gives each bank's issue offset (bank *k*'s
+        stream may not start before ``offsets_ns[k]``); ``policy`` overrides
+        the timing's ``desync_policy`` for this replay.  Refresh windows are
+        anchored at this replay's t=0 (each op replays standalone), so only
+        ops that individually span a tREFI interval accrue refresh stall.
+        """
+        policy = policy or self.timing.desync_policy
+        if policy not in ("desync", "lockstep"):
+            raise ValueError(f"unknown desync policy {policy!r}")
+        banks = max(1, int(banks))
         kinds = trace.seqs[:, 0].tolist()
-        for kind in kinds:
-            bank.activate(c_rp, c_rc)
-            if kind != SEQ_AP:                    # AAP / Case-2 fused AAP
-                bank.activate_back_to_back(c_ras)
-            bank.precharge(c_ras)
-        # the final precharge must complete before the op retires
-        cycles = bank.now + c_rp if kinds else 0
-        ns = cycles * self.timing.tCK_ns
+        tck = self.timing.tCK_ns
+        if not kinds:
+            return ReplayResult(ns=0.0, stall_ns=0.0, cycles=0, n_seqs=0,
+                                n_acts=0, banks=banks)
+        if offsets_ns is not None and len(offsets_ns) != banks:
+            raise ValueError(f"{len(offsets_ns)} issue offsets for "
+                             f"{banks} banks")
+        lockstep = policy == "lockstep"
+        if lockstep:
+            # legacy broadcast: one FSM stands in for every bank (banks
+            # mirror for free — no tRRD/tFAW coupling, offsets ignored)
+            offsets = [0]
+        else:
+            offsets = [0] * banks if offsets_ns is None else \
+                [math.ceil(o / tck) for o in offsets_ns]
+        n_banks = len(offsets)
+        rank = self._rank(coupled=not lockstep)
+        c_ras, c_rp, c_rc = self.c_ras, self.c_rp, self.c_rc
+        n_seq = len(kinds)
+        # per-bank FSM state (the bank powers up idle and precharged)
+        now = list(offsets)
+        last_act = [o - c_rc for o in offsets]
+        last_pre = [o - c_rp for o in offsets]
+        seq_i = [0] * n_banks
+        phase = [0] * n_banks            # 1 = second ACT of an AAP pending
+        finish = [0] * n_banks
+        n_acts = 0
+        pending = n_banks
+        while pending:
+            # next activation: the bank whose FSM is locally ready first
+            best_k = -1
+            best_t = 0
+            for k in range(n_banks):
+                if seq_i[k] >= n_seq:
+                    continue
+                if phase[k]:
+                    t = last_act[k] + c_ras
+                else:
+                    t = max(now[k], last_pre[k] + c_rp, last_act[k] + c_rc)
+                if best_k < 0 or t < best_t:
+                    best_k, best_t = k, t
+            k = best_k
+            t = rank.constrain(best_t)
+            rank.record(t)
+            last_act[k] = t
+            n_acts += 1
+            if phase[k] == 0 and kinds[seq_i[k]] != SEQ_AP:
+                phase[k] = 1              # AAP / Case-2: back-to-back ACT
+            else:
+                pre = t + c_ras           # sequence retires with a PRECHARGE
+                last_pre[k] = pre
+                now[k] = pre
+                phase[k] = 0
+                seq_i[k] += 1
+                if seq_i[k] == n_seq:
+                    # the final precharge must complete before the op retires
+                    finish[k] = pre + c_rp
+                    pending -= 1
+        cycles = max(finish)
+        min_cycles = min(finish)      # lockstep: one timeline, min == max
+        ns = cycles * tck
         mix = trace.command_mix()
         analytic = (mix["AAP"] * self.timing.t_aap_ns
                     + mix["AP"] * self.timing.t_ap_ns)
-        return ReplayResult(ns=ns, stall_ns=max(0.0, ns - analytic),
-                            cycles=cycles, n_seqs=len(kinds),
-                            n_acts=bank.n_acts)
+        return ReplayResult(
+            ns=ns, stall_ns=max(0.0, ns - analytic), cycles=cycles,
+            n_seqs=n_seq * banks, n_acts=n_acts * (banks if lockstep else 1),
+            banks=banks, max_bank_ns=ns, min_bank_ns=min_cycles * tck,
+            tfaw_stall_ns=rank.tfaw_stall * tck,
+            refresh_stall_ns=rank.refresh_stall * tck,
+            n_refresh_stalls=rank.n_refresh_stalls)
 
 
 class SimdramPerfModel:
@@ -231,20 +378,29 @@ class SimdramPerfModel:
         self.transposition = transposition or TranspositionModel()
         self.replay_timing = replay or TraceReplayTiming(self.timing)
 
-    def replay_result(self, trace) -> ReplayResult:
-        """Replay a lowered trace on the bank FSM (measured-style latency)."""
-        return self.replay_timing.replay(trace)
+    def replay_result(self, trace, banks: int = 1,
+                      offsets_ns=None) -> ReplayResult:
+        """Replay a lowered trace on the per-bank FSM array (measured-style
+        latency, tFAW/refresh windows, optional per-bank issue offsets)."""
+        return self.replay_timing.replay(trace, banks=banks,
+                                         offsets_ns=offsets_ns)
 
-    def replay_latency_ns(self, trace) -> float:
-        return self.replay_result(trace).ns
+    def replay_latency_ns(self, trace, banks: int = 1) -> float:
+        return self.replay_result(trace, banks=banks).ns
 
-    def replay_energy_nj(self, prog: UProgram, trace) -> float:
+    def replay_energy_nj(self, prog: UProgram, trace, banks: int = 1,
+                         result: ReplayResult | None = None) -> float:
         """Replayed energy: the activation energy is fixed by the command
-        mix (identical to the analytic model), but stall cycles still burn
-        background/peripheral power — so replayed nJ ≥ analytic nJ by
-        exactly ``background_w × stall_ns``."""
+        mix (identical to the analytic model, × banks), but stall cycles
+        still burn per-bank background/peripheral power — so replayed nJ ≥
+        analytic nJ by exactly ``banks × background_w × stall_ns``.  This is
+        the single source of truth for the formula:
+        ``PerfStats.charge_program`` calls it (passing its memoized
+        ``result``) instead of re-deriving it inline."""
+        if result is None:
+            result = self.replay_result(trace, banks=banks)
         return (self.energy_nj(prog)
-                + self.energy.background_w * self.replay_result(trace).stall_ns)
+                + self.energy.background_w * result.stall_ns) * banks
 
     def latency_ns(self, prog: UProgram) -> float:
         mix = prog.command_mix()

@@ -383,7 +383,10 @@ def test_smoke_gate_cache_and_replay_rows():
     bad_gate_rows = _load_bench_common().bad_gate_rows
     good = ("cache/chain8/n512,1.0,compile_speedup=9.61x cache_hits=27 "
             "cache_misses=5 cache_hit_rate=0.844\n"
-            "replay/addition/8b,0,replay_ns=4623.98 analytic_ns=4568.40\n")
+            "replay/addition/8b,0,replay_ns=7058.01 lockstep_ns=4623.98 "
+            "analytic_ns=4568.40\n"
+            "replay/refresh_ab/mul/8b,0,refresh_on_ns=45902.5 "
+            "refresh_off_ns=44166.5\n")
     assert bad_gate_rows(good) == []
     assert bad_gate_rows("x,0,cache_hit_rate=0.000\n")
     assert bad_gate_rows("x,0,cache_hit_rate=nan\n")
@@ -396,3 +399,12 @@ def test_smoke_gate_cache_and_replay_rows():
     assert bad_gate_rows("x,0,replay_ns=10.0 analytic_ns=0.0\n")
     # analytic alone (e.g. a modeled row) is not gated
     assert bad_gate_rows("x,0,analytic_ns=5.0\n") == []
+    # desync-vs-lockstep and refresh on-vs-off orderings are gated too
+    assert bad_gate_rows("x,0,replay_ns=10.0 lockstep_ns=11.0\n")
+    assert bad_gate_rows("x,0,lockstep_ns=10.0 analytic_ns=11.0\n")
+    assert bad_gate_rows("x,0,lockstep_ns=0.0 analytic_ns=0.0\n")
+    assert bad_gate_rows("x,0,refresh_on_ns=10.0 refresh_off_ns=11.0\n")
+    assert bad_gate_rows("x,0,refresh_on_ns=nan refresh_off_ns=1.0\n")
+    assert bad_gate_rows("x,0,refresh_on_ns=12.0 refresh_off_ns=oops\n")
+    assert bad_gate_rows("x,0,refresh_on_ns=12.0 refresh_off_ns=11.0\n") == []
+    assert bad_gate_rows("x,0,lockstep_ns=11.0 analytic_ns=10.0\n") == []
