@@ -175,6 +175,21 @@ def cache_and_replay(smoke: bool = False) -> None:
         f"cache_hit_rate={st['hit_rate']:.3f} "
         f"cold_misses={after_cold['misses']}")
 
+    # session-machine μProgram Memory: an explicit SimdramMachine running
+    # the same chain through its own bounded cache — hit rate gated like
+    # the process-wide cache above
+    from repro.ops import SimdramMachine
+    mach = SimdramMachine(backend="unrolled", cache_capacity=16)
+    for _ in range(2):
+        with mach.pipeline() as p:
+            x, y = p.load([a, b], 8)
+            _block(p.store(bbop_relu(bbop_add(x, y, 8), 8)))
+    cs = mach.cache_stats()
+    row(f"machine/cache/n{n}", 0,
+        f"cache_hits={cs['hits']} cache_misses={cs['misses']} "
+        f"cache_hit_rate={cs['hit_rate']:.3f} entries={cs['entries']} "
+        f"capacity={cs['capacity']} evictions={cs['evictions']}")
+
     # replay-mode pipeline: replayed vs analytic ns/nJ side by side
     with simdram_pipeline(timed=True, model="replay") as p:
         x, y = p.load([a, b], 8)
@@ -184,6 +199,29 @@ def cache_and_replay(smoke: bool = False) -> None:
         f"replay_ns={ps.replay_ns:.1f} analytic_ns={ps.exec_ns:.1f} "
         f"replay_nj={ps.replay_nj:.1f} analytic_nj={ps.exec_nj:.1f} "
         f"stall_ns={ps.replay_stall_ns:.1f}")
+
+    # cross-op refresh phase A/B: the same short-op chain with the replay
+    # clock threaded through the refresh grid vs per-op anchoring.  Every
+    # op here individually fits inside tREFI, so the anchored run accrues
+    # zero refresh stall while the phased run crosses windows mid-chain —
+    # the gate requires phased >= anchored (phase can only add stall).
+    def _phase_chain(refresh_phase):
+        with simdram_pipeline(timed=True, model="replay",
+                              refresh_phase=refresh_phase) as p:
+            x, y = p.load([a, b], 8)
+            t = bbop_add(x, y, 8)
+            t = bbop_sub(t, x, 8)
+            t = bbop_relu(t, 8)
+            t = bbop_add(t, y, 8)
+            _block(p.store(t))
+        return p.stats
+
+    ph, an = _phase_chain(True), _phase_chain(False)
+    row(f"replay/refresh_phase/chain4/n{n}", 0,
+        f"refresh_phased_ns={ph.replay_ns:.1f} "
+        f"refresh_anchored_ns={an.replay_ns:.1f} "
+        f"phased_refresh_stall_ns={ph.replay_refresh_ns:.1f} "
+        f"anchored_refresh_stall_ns={an.replay_refresh_ns:.1f}")
 
     # banked replay-mode pipeline: the desynchronized per-bank streams
     # (rank-coupled FSM array) with their per-bank stall breakdown

@@ -55,9 +55,12 @@ def bad_gate_rows(text: str) -> list[str]:
       replay layer can only *add* stall cycles, so a smaller value means an
       FSM dropped work: ``replay_ns >= analytic_ns`` (cycle quantization +
       hazards), ``replay_ns >= lockstep_ns`` (rank-coupled desynchronized
-      streams vs the broadcast FSM), ``lockstep_ns >= analytic_ns``, and
-      ``refresh_on_ns >= refresh_off_ns`` (refresh windows only stall).
-      Both members of every present pair must be finite and non-zero.
+      streams vs the broadcast FSM), ``lockstep_ns >= analytic_ns``,
+      ``refresh_on_ns >= refresh_off_ns`` (refresh windows only stall), and
+      ``refresh_phased_ns >= refresh_anchored_ns`` (threading the cross-op
+      refresh phase through a chain can only add stall over per-op
+      anchoring).  Both members of every present pair must be finite and
+      non-zero.
     """
     # (slower_key, faster_key, why) — slower >= faster, both finite > 0
     orderings = (
@@ -65,6 +68,8 @@ def bad_gate_rows(text: str) -> list[str]:
         ("replay_ns", "lockstep_ns", "desync can only add stalls"),
         ("lockstep_ns", "analytic_ns", "lockstep replay can only add stalls"),
         ("refresh_on_ns", "refresh_off_ns", "refresh can only add stalls"),
+        ("refresh_phased_ns", "refresh_anchored_ns",
+         "threading the refresh phase across ops can only add stalls"),
     )
     bad = []
     for line in text.splitlines():

@@ -3,10 +3,12 @@
 1. Step 1-2: compile an operation (AOIG → MIG → μProgram) and inspect it.
 2. Step 3: execute it — faithful subarray model and the JAX fast path.
 3. The paper's Listing 1: predicated vector add/sub via bbops.
-4. Plane-resident pipelines: chain ops vertically, pick a backend, batch
-   over banks — zero per-op transposition-unit traffic.
-5. Timed execution: the same fused chain under the modeled-DRAM cost
-   layer — end-to-end nanoseconds/nanojoules/GOps/s from the live run.
+4. `SimdramMachine`: the session-scoped end-to-end API — one object owning
+   DRAM timing, banks, backend, its own μProgram Memory and PerfStats.
+5. **User-defined operations**: the paper's headline feature — register an
+   arbitrary AOIG with `machine.define_op` and execute it on every
+   backend, with replay timing, no framework changes.
+6. Plane-resident pipelines + timed execution on the machine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,10 +17,12 @@ import jax.numpy as jnp
 
 from repro.core.circuits import PAPER_COUNTS, compile_operation
 from repro.core.executor import from_planes, run_program
-from repro.ops import (bbop_add, bbop_greater, bbop_if_else, bbop_mul,
-                       bbop_relu, bbop_sub, simdram_pipeline)
+from repro.core.graph import lit_not
+from repro.core.uprogram import DRow
+from repro.ops import (SimdramMachine, bbop_add, bbop_greater, bbop_if_else,
+                       bbop_mul, bbop_relu, bbop_sub, simdram_pipeline)
 from repro.simdram.layout import reset_transpose_stats, transpose_counts
-from repro.simdram.timing import SimdramPerfModel
+from repro.simdram.timing import DRAMTiming, SimdramPerfModel
 
 
 def main():
@@ -53,34 +57,79 @@ def main():
     assert np.array_equal(np.asarray(C), exp)
     print("Listing-1 predicated add/sub: OK ->", np.asarray(C)[:8], "...")
 
-    # --- plane-resident pipeline: one transpose pair for a 3-op chain -------
-    a = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
-    b = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
-    c = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
+    # --- SimdramMachine: the whole configuration in one session object ------
+    machine = SimdramMachine(timing=DRAMTiming(), banks=16,
+                             backend="unrolled", cache_capacity=32)
+    x = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
+    out = machine.op("addition")(x, y, n_bits=8)
+    assert np.array_equal(np.asarray(out),
+                          (np.asarray(x) + np.asarray(y)) & 255)
+    print(f"\n{machine}")
+    print("machine.op('addition'): OK   μProgram Memory:",
+          machine.cache_stats())
+
+    # --- user-defined operation: the paper's Steps 1-3 as API ---------------
+    # Step 1 — describe the 1-bit slice as an AOIG: out = a - b·gate
+    # (a borrow-chained subtract whose subtrahend is predicated per lane)
+    def build_gated_sub(g):
+        av, bv, gate, w = (g.input(n) for n in ("a", "b", "gate", "borrow"))
+        bg = g.gate_and(bv, gate)
+        axb = g.gate_xor(av, bg)
+        g.add_output("out", g.gate_xor(axb, w))
+        g.add_output("borrow", g.gate_or_node(
+            g.gate_and(lit_not(av), bg), g.gate_and(w, lit_not(axb))))
+
+    # Steps 1-2 — synthesize to an optimized MIG, allocate B-group rows,
+    # generate + lower the μProgram (cached in the machine's memory)
+    gated_sub = machine.define_op(
+        "gated_sub", build_gated_sub,
+        invariants={"gate": DRow("gate", 0, fixed=True)},
+        states={"borrow": 0})
+    gprog, gtrace = gated_sub.program(n_bits=8)
+    print(f"\nuser-defined gated_sub: {gprog.command_count()} command "
+          f"sequences at 8 bits, {gtrace.n_commands} in the lowered trace")
+
+    # Step 3 — execute on every registered backend, no other changes
+    gmask = jnp.asarray(rng.integers(0, 2, 64), jnp.int32)
+    expect = np.where(np.asarray(gmask),
+                      (np.asarray(x) - np.asarray(y)) & 255, np.asarray(x))
+    for be in ("reference", "unrolled", "pallas"):
+        got = gated_sub(x, y, gmask, n_bits=8, backend=be)
+        assert np.array_equal(np.asarray(got), expect), be
+    print("gated_sub on reference/unrolled/pallas: OK ->", expect[:8], "...")
+
+    # ... and with cycle-accurate replay timing, also for free
+    with machine.timed(mode="replay") as st:
+        gated_sub(x, y, gmask, n_bits=8)
+    print(f"gated_sub replay timing: {st.replay_ns:.0f} ns replayed >= "
+          f"{st.exec_ns:.0f} ns analytic")
+
+    # --- plane-resident pipeline on the machine (one transpose pair) --------
+    av = jnp.asarray(rng.integers(0, 256, (16, 64)), jnp.int32)
+    bv = jnp.asarray(rng.integers(0, 256, (16, 64)), jnp.int32)
+    cv = jnp.asarray(rng.integers(0, 256, (16, 64)), jnp.int32)
     reset_transpose_stats()
-    with simdram_pipeline(backend="unrolled") as p:
-        pa, pb, pc = p.load([a, b, c], 8)
+    with machine.pipeline(timed=True) as p:
+        pa, pb, pc = p.load([av, bv, cv], 8)
         res = p.store(bbop_relu(bbop_add(bbop_mul(pa, pb, 8), pc, 8), 8))
-    print(f"fused relu(add(mul(a,b),c)): transposition-unit passes "
-          f"(to, from) = {transpose_counts()} ->", np.asarray(res)[:8], "...")
-
-    # --- same chain, bank-batched (the paper's 16-bank scaling) -------------
-    ab = jnp.asarray(rng.integers(0, 256, (16, 64)), jnp.int32)
-    bb = jnp.asarray(rng.integers(0, 256, (16, 64)), jnp.int32)
-    with simdram_pipeline(banks=16) as p:
-        pa, pb = p.load([ab, bb], 8)
-        banked = p.store(bbop_add(pa, pb, 8))
-    assert np.array_equal(np.asarray(banked),
-                          (np.asarray(ab) + np.asarray(bb)) & 255)
-    print("16-bank batched add: OK", banked.shape)
-
-    # --- timed execution: modeled DRAM cost of the live fused chain ---------
-    with simdram_pipeline(banks=16, timed=True) as p:
-        pa, pb = p.load([ab, bb], 8)
-        p.store(bbop_relu(bbop_add(pa, pb, 8), 8))
-    print("\ntimed 16-bank relu(add(a,b)) — modeled DRAM cost "
+    raw = (np.asarray(av) * np.asarray(bv) + np.asarray(cv)) & 255
+    assert np.array_equal(np.asarray(res), np.where(raw >> 7, 0, raw))
+    assert transpose_counts() == (1, 1)     # one fused pass each way
+    print(f"\nfused 16-bank relu(add(mul(a,b),c)): transposition-unit "
+          f"passes (to, from) = {transpose_counts()} ->",
+          np.asarray(res)[0, :8], "...")
+    print("\ntimed chain on the machine's own accumulator "
           "(μProgram AAP/AP latencies + movement + transposition):")
-    print(p.perf_report())
+    print(machine.perf_report())
+
+    # --- machines are isolated: a second session, different substrate -------
+    other = SimdramMachine(timing=DRAMTiming(tRAS_ns=64.0),
+                           backend="reference")
+    other.op("addition")(x, y, n_bits=8)
+    print(f"\nsecond machine (slow tRAS, reference backend) kept its own "
+          f"cache {other.cache_stats()['entries']} entries; first machine "
+          f"unchanged: {machine.cache_stats()['entries']} entries")
 
 
 if __name__ == "__main__":

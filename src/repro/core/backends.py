@@ -130,8 +130,26 @@ def use_backend(name: str):
 # ---------------------------------------------------------------------------
 
 # PerfStats currently charging (a stack: nested timed scopes all observe;
-# the same accumulator registered twice still charges once)
+# the same accumulator registered twice still charges once).  Accumulators
+# *owned* by a SimdramMachine only observe work executed by that machine —
+# two interleaved machine sessions never cross-charge.
 _ACTIVE_STATS: list["PerfStats"] = []
+
+
+# replaced by repro.simdram.machine at import with its current_machine();
+# kept injectable so this module never imports the machine layer eagerly
+def _current_machine():
+    return None
+
+
+def _charging_stats(machine=None) -> list["PerfStats"]:
+    """Active accumulators that should observe work executed by
+    ``machine`` (None = the innermost open machine session, if any)."""
+    if not _ACTIVE_STATS:
+        return _ACTIVE_STATS
+    eff = machine if machine is not None else _current_machine()
+    return [st for st in _ACTIVE_STATS
+            if st.owner is None or st.owner is eff]
 
 # op outputs tracked for movement charging are bounded: consumers only ever
 # reach a handful of ops back, and an unbounded map would pin every
@@ -196,6 +214,18 @@ class PerfStats:
     model: SimdramPerfModel = dataclasses.field(
         default_factory=SimdramPerfModel)
     mode: str = "analytic"             # or "replay"
+    # replay mode only: thread the accumulated replay clock into each op's
+    # refresh-window grid, so refresh windows are anchored in pipeline time
+    # instead of per-op t=0 and ops shorter than tREFI still accrue their
+    # share of refresh stall across a long chain (the cross-op refresh
+    # phase).  Phase threading only ever moves windows *earlier* in an
+    # op's local time, so phased replay_ns >= per-op-anchored replay_ns
+    # for chains whose individual ops fit inside one tREFI interval.
+    refresh_phase: bool = False
+    # the SimdramMachine this accumulator belongs to, if any: an owned
+    # accumulator only observes its own machine's work even while other
+    # sessions' timed scopes are open (see _charging_stats)
+    owner: object = dataclasses.field(default=None, repr=False, compare=False)
     exec_ns: float = 0.0
     exec_nj: float = 0.0
     replay_ns: float = 0.0
@@ -247,12 +277,14 @@ class PerfStats:
                 del self._prog_costs[next(iter(self._prog_costs))]
         return hit
 
-    def _replay_cost(self, trace: LoweredTrace, banks: int, offsets):
-        key = (id(trace), banks, offsets)
+    def _replay_cost(self, trace: LoweredTrace, banks: int, offsets,
+                     phase_ns: float = 0.0):
+        key = (id(trace), banks, offsets, round(phase_ns, 3))
         hit = self._replay_costs.get(key)
         if hit is None:
             hit = (self.model.replay_result(trace, banks=banks,
-                                            offsets_ns=offsets), trace)
+                                            offsets_ns=offsets,
+                                            refresh_phase_ns=phase_ns), trace)
             self._replay_costs[key] = hit
             while len(self._replay_costs) > _COST_CAP:
                 del self._replay_costs[next(iter(self._replay_costs))]
@@ -276,7 +308,9 @@ class PerfStats:
         d["ns"] += lat
         d["nj"] += en * banks
         if self.mode == "replay" and trace is not None:
-            res = self._replay_cost(trace, banks, offsets)
+            # phase = the replay clock *before* this op starts
+            phase_ns = self.replay_ns if self.refresh_phase else 0.0
+            res = self._replay_cost(trace, banks, offsets, phase_ns)
             self.replay_ns += res.ns
             self.replay_stall_ns += res.stall_ns
             self.replay_tfaw_ns += res.tfaw_stall_ns
@@ -374,9 +408,10 @@ class PerfStats:
         return self.gops() / max(1, self.max_banks)
 
     def reset(self) -> None:
-        fresh = PerfStats(model=self.model, mode=self.mode)
+        fresh = PerfStats(model=self.model, mode=self.mode,
+                          refresh_phase=self.refresh_phase)
         for f in dataclasses.fields(self):
-            if f.name not in ("model", "mode"):
+            if f.name not in ("model", "mode", "refresh_phase", "owner"):
                 setattr(self, f.name, getattr(fresh, f.name))
 
     def report(self) -> str:
@@ -392,7 +427,8 @@ class PerfStats:
                 f"{self.replay_nj:10.1f} nJ  "
                 f"(+{self.replay_stall_ns:.1f} ns stall vs analytic)",
                 f"    tFAW stalls     {self.replay_tfaw_ns:9.1f} ns   "
-                f"refresh stalls {self.replay_refresh_ns:9.1f} ns",
+                f"refresh stalls {self.replay_refresh_ns:9.1f} ns "
+                f"({'phase-threaded' if self.refresh_phase else 'per-op anchored'})",
                 f"    bank finish spread {self.replay_bank_spread_ns:6.1f} ns"
                 f"  (Σ per-op slowest − fastest bank)",
             ]
@@ -425,9 +461,18 @@ def active_stats() -> tuple["PerfStats", ...]:
     return tuple(_ACTIVE_STATS)
 
 
+def _default_model() -> SimdramPerfModel:
+    """The perf model fresh accumulators charge with when none is given —
+    the default machine's, so the ambient ``timed()`` surface and
+    :class:`~repro.simdram.machine.SimdramMachine` sessions agree."""
+    from ..simdram.machine import default_machine
+    return default_machine().model
+
+
 @contextlib.contextmanager
 def timed(backend: str | None = None, stats: PerfStats | None = None,
-          model: SimdramPerfModel | None = None, mode: str | None = None):
+          model: SimdramPerfModel | None = None, mode: str | None = None,
+          refresh_phase: bool | None = None):
     """Scoped timed execution: every ``execute_program`` call and every
     transposition-unit pass inside the scope charges its modeled DRAM cost.
 
@@ -444,10 +489,13 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
     (disable with ``tFAW_ns=0`` / ``tREFI_ns=0``; ``desync_policy=
     "lockstep"`` restores the legacy broadcast FSM).  The per-bank
     breakdown lands in ``replay_tfaw_ns`` / ``replay_refresh_ns`` /
-    ``replay_bank_spread_ns`` and in ``report()``.  Pass an existing
-    ``stats`` to keep accumulating across scopes (e.g. one accumulator for
-    a whole decode loop); nested scopes each observe every charge.  Yields
-    the :class:`PerfStats`.
+    ``replay_bank_spread_ns`` and in ``report()``.  ``refresh_phase=True``
+    (replay mode) threads the accumulated replay clock into each op's
+    refresh-window grid, so refresh stall accrues across op boundaries in
+    long chains instead of re-anchoring at every op's t=0.  Pass an
+    existing ``stats`` to keep accumulating across scopes (e.g. one
+    accumulator for a whole decode loop); nested scopes each observe every
+    charge.  Yields the :class:`PerfStats`.
     """
     if stats is not None and model is not None and stats.model is not model:
         raise ValueError(
@@ -458,8 +506,14 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
         raise ValueError(
             f"stats accumulator runs in {stats.mode!r} mode; it cannot "
             f"switch to {mode!r} mid-flight — pass a fresh accumulator")
+    if stats is not None and refresh_phase is not None \
+            and stats.refresh_phase != refresh_phase:
+        raise ValueError(
+            "stats accumulator cannot switch refresh-phase threading "
+            "mid-flight — pass a fresh accumulator")
     st = stats if stats is not None else PerfStats(
-        model=model or SimdramPerfModel(), mode=mode or "analytic")
+        model=model or _default_model(), mode=mode or "analytic",
+        refresh_phase=bool(refresh_phase))
     ctx = use_backend(backend) if backend is not None \
         else contextlib.nullcontext()
     with ctx:
@@ -485,14 +539,14 @@ def timed(backend: str | None = None, stats: PerfStats | None = None,
 
 
 def _transpose_hook(kind: str, n_bits: int, lanes: int) -> None:
-    for st in _ACTIVE_STATS:
+    for st in _charging_stats():
         st.charge_transpose(n_bits, lanes, kind=kind)
 
 
 def _movement_hook(kind: str, n_rows: int, banks: int | None = None,
                    planes=None) -> None:
     inter = kind == "inter"
-    for st in _ACTIVE_STATS:
+    for st in _charging_stats():
         st.charge_movement(n_rows, inter_bank=inter)
         if inter and banks:
             # scatter: the serialized bus transfer desynchronizes the banks
@@ -514,14 +568,30 @@ def execute_program(prog: UProgram, operands: dict, out_bits=None,
     scope, the call charges its modeled DRAM cost before dispatch (and, in
     replay mode, the FSM-replayed cost of the same trace).
     """
+    return execute_lowered(prog, lower_program(prog), operands,
+                           out_bits=out_bits, backend=backend)
+
+
+def execute_lowered(prog: UProgram, trace: LoweredTrace, operands: dict,
+                    out_bits=None, backend: str | None = None,
+                    machine=None) -> dict:
+    """Dispatch an already-lowered ``(μProgram, trace)`` pair to a backend.
+
+    The seam per-machine μProgram Memories execute through: a
+    :class:`~repro.core.trace.TraceCache` hands back its cached pair and
+    nothing re-lowers.  Semantics are identical to :func:`execute_program`
+    (which is this plus the process-wide lowering memo).  ``machine``
+    attributes the work for accumulator filtering: machine-owned PerfStats
+    only charge for their own machine's executions.
+    """
     fn = get_backend(backend)
-    trace = lower_program(prog)
     first = next(iter(operands.values()))
     banked = first.ndim == 3
     if banked and any(v.ndim != 3 for v in operands.values()):
         raise ValueError("banked execution needs every operand banked")
     banks = first.shape[0] if banked else 1
-    for st in _ACTIVE_STATS:
+    charging = _charging_stats(machine)
+    for st in charging:
         offsets = None
         for planes in operands.values():
             if id(planes) in st._resident:
@@ -553,7 +623,7 @@ def execute_program(prog: UProgram, operands: dict, out_bits=None,
                             )(operands)
     else:
         outs = fn(trace, operands, out_bits=out_bits)
-    for st in _ACTIVE_STATS:
+    for st in charging:
         for arr in outs.values():
             st.note_output(arr)
     return outs

@@ -335,8 +335,15 @@ def compile_division(n_bits: int, optimize: bool = True) -> UProgram:
 
 
 # ---------------------------------------------------------------------------
-# Public compilation entry
+# Operation registry — the framework's programmable op table
 # ---------------------------------------------------------------------------
+#
+# The paper's pitch is the *framework*, not the 16 built-in operations: any
+# AOIG a programmer supplies runs through the same Step-1/2/3 pipeline.  The
+# op table is therefore a registry, not a hardcoded dispatch: the 16 Table-5
+# operations register at import, and user operations join at runtime via
+# :func:`register_operation` (process-wide) or, scoped to one session,
+# ``SimdramMachine.define_op`` (:mod:`repro.simdram.machine`).
 
 CLASS_OF = {
     "abs": 1, "addition": 1, "bitcount": 1, "maximum": 1, "minimum": 1,
@@ -364,44 +371,142 @@ PAPER_COUNTS = {  # Table 5 closed forms
     "greater_equal": lambda n: 3 * n + 2,
 }
 
+# the 16 built-ins, frozen before any user registration can extend CLASS_OF
 ALL_OPS = tuple(CLASS_OF)
 
 
+@dataclasses.dataclass(frozen=True)
+class OperationDef:
+    """One registered operation: a compile entry point plus metadata.
+
+    ``compile_fn(n_bits, optimize)`` must return a fully-formed
+    :class:`~repro.core.uprogram.UProgram` — anything built from
+    :func:`~repro.core.compiler.compile_slice` /
+    :func:`~repro.core.compiler.compile_flat` / :func:`rebase` /
+    :func:`~repro.core.uprogram.concat_programs` qualifies.
+    """
+
+    name: str
+    compile_fn: object            # (n_bits: int, optimize: bool) -> UProgram
+    op_class: int | None = None   # paper Table-5 class (1/2/3), if meaningful
+    builtin: bool = False
+
+
+_OPERATIONS: dict[str, OperationDef] = {}
+
+
+def register_operation(name: str, compile_fn, *, op_class: int | None = None,
+                       paper_count=None, override: bool = False,
+                       _builtin: bool = False) -> OperationDef:
+    """Register a new operation with the process-wide op table.
+
+    After registration the operation is a first-class citizen of the whole
+    framework: :func:`compile_operation`, the compile/lower cache
+    (:func:`repro.core.trace.compile_trace`), every execution backend and
+    the replay-timing substrate all pick it up with no other change.
+    ``paper_count`` optionally records a closed-form command count (joins
+    ``PAPER_COUNTS``); ``override=True`` replaces an existing non-builtin
+    registration.
+    """
+    if not callable(compile_fn):
+        raise TypeError(f"compile_fn for {name!r} must be callable")
+    existing = _OPERATIONS.get(name)
+    if existing is not None:
+        if existing.builtin:
+            raise ValueError(f"cannot override built-in operation {name!r}")
+        if not override:
+            raise ValueError(f"operation {name!r} already registered "
+                             "(pass override=True to replace it)")
+    d = OperationDef(name, compile_fn, op_class, _builtin)
+    _OPERATIONS[name] = d
+    if op_class is not None:
+        CLASS_OF[name] = op_class
+    if paper_count is not None:
+        PAPER_COUNTS[name] = paper_count
+    if existing is not None:
+        _drop_cached_compiles(name)
+    return d
+
+
+def unregister_operation(name: str) -> None:
+    """Remove a user-registered operation (built-ins are protected)."""
+    d = _OPERATIONS.get(name)
+    if d is None:
+        return
+    if d.builtin:
+        raise ValueError(f"cannot unregister built-in operation {name!r}")
+    del _OPERATIONS[name]
+    if name not in ALL_OPS:
+        CLASS_OF.pop(name, None)
+        PAPER_COUNTS.pop(name, None)
+    _drop_cached_compiles(name)
+
+
+def _drop_cached_compiles(name: str) -> None:
+    """A replaced or removed registration must also leave every live
+    compile/lower cache — private machine memories resolve unknown names
+    through this registry, so the stale compile could otherwise keep
+    executing out of any of them."""
+    from .trace import invalidate_everywhere
+    invalidate_everywhere(name)
+
+
+def get_operation(name: str) -> OperationDef:
+    try:
+        return _OPERATIONS[name]
+    except KeyError:
+        raise KeyError(name) from None
+
+
+def list_operations() -> tuple[str, ...]:
+    """Every registered operation name (built-ins + user registrations)."""
+    return tuple(sorted(_OPERATIONS))
+
+
 def compile_operation(name: str, n_bits: int, optimize: bool = True) -> UProgram:
-    """Compile any of the 16 SIMDRAM operations for n-bit elements.
+    """Compile any registered SIMDRAM operation for n-bit elements.
 
     ``optimize=False`` skips Step-1 MIG optimization, yielding the naive
     AND/OR/NOT-equivalent command stream — this is the paper's Ambit
     baseline (§6: 'evaluate all 16 SIMDRAM operations in Ambit using their
     equivalent AND/OR/NOT-based implementations').
     """
-    kw = dict(optimize=optimize)
-    if name == "addition":
-        return compile_slice(spec_add(), n_bits, **kw)
-    if name == "subtraction":
-        return compile_slice(spec_sub(), n_bits, **kw)
-    if name == "greater":
-        return compile_slice(spec_greater(), n_bits, **kw)
-    if name == "greater_equal":
-        return compile_slice(spec_greater_equal(), n_bits, **kw)
-    if name == "equal":
-        return compile_slice(spec_equal(), n_bits, **kw)
-    if name == "if_else":
-        return compile_slice(spec_if_else(), n_bits, **kw)
-    if name == "relu":
-        return compile_slice(spec_relu(n_bits), n_bits, **kw)
-    if name == "abs":
-        return compile_slice(spec_abs(n_bits), n_bits, **kw)
-    if name in ("and_reduction", "or_reduction", "xor_reduction"):
-        return compile_slice(spec_reduction(name.split("_")[0]), n_bits, **kw)
-    if name == "maximum":
-        return compile_max(n_bits, **kw)
-    if name == "minimum":
-        return compile_max(n_bits, minimum=True, **kw)
-    if name == "bitcount":
-        return compile_bitcount(n_bits, **kw)
-    if name == "multiplication":
-        return compile_multiplication(n_bits, **kw)
-    if name == "division":
-        return compile_division(n_bits, **kw)
-    raise KeyError(name)
+    return get_operation(name).compile_fn(n_bits, optimize)
+
+
+def _register_builtins() -> None:
+    def slice_of(spec_fn, per_width: bool = False):
+        if per_width:
+            return lambda n, opt=True: compile_slice(spec_fn(n), n,
+                                                     optimize=opt)
+        return lambda n, opt=True: compile_slice(spec_fn(), n, optimize=opt)
+
+    builtins = {
+        "addition": slice_of(spec_add),
+        "subtraction": slice_of(spec_sub),
+        "greater": slice_of(spec_greater),
+        "greater_equal": slice_of(spec_greater_equal),
+        "equal": slice_of(spec_equal),
+        "if_else": slice_of(spec_if_else),
+        "relu": slice_of(spec_relu, per_width=True),
+        "abs": slice_of(spec_abs, per_width=True),
+        "and_reduction": lambda n, opt=True: compile_slice(
+            spec_reduction("and"), n, optimize=opt),
+        "or_reduction": lambda n, opt=True: compile_slice(
+            spec_reduction("or"), n, optimize=opt),
+        "xor_reduction": lambda n, opt=True: compile_slice(
+            spec_reduction("xor"), n, optimize=opt),
+        "maximum": lambda n, opt=True: compile_max(n, optimize=opt),
+        "minimum": lambda n, opt=True: compile_max(n, minimum=True,
+                                                   optimize=opt),
+        "bitcount": lambda n, opt=True: compile_bitcount(n, optimize=opt),
+        "multiplication": lambda n, opt=True: compile_multiplication(
+            n, optimize=opt),
+        "division": lambda n, opt=True: compile_division(n, optimize=opt),
+    }
+    assert set(builtins) == set(ALL_OPS)
+    for name, fn in builtins.items():
+        register_operation(name, fn, op_class=CLASS_OF[name], _builtin=True)
+
+
+_register_builtins()

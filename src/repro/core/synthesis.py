@@ -330,3 +330,50 @@ def synthesize(aoig: LogicGraph, optimize: bool = True) -> LogicGraph:
     """Full Step 1: AOIG → (optimized) MIG."""
     mig = aoig_to_mig_naive(aoig)
     return optimize_mig(mig) if optimize else mig
+
+
+class SynthesisError(ValueError):
+    """Step-1 synthesis produced a MIG that disagrees with its AOIG."""
+
+
+def check_synthesis(aoig: LogicGraph, name: str = "graph",
+                    max_inputs: int = 12) -> None:
+    """Exhaustively verify Step-1 synthesis for a (slice-sized) AOIG.
+
+    Both MIG forms — the naive MAJ/NOT substitution (the Ambit baseline)
+    and the optimized MIG — are evaluated bit-parallel against the source
+    AOIG on *every* input assignment (one SIMD lane per assignment, like
+    bitlines).  User-defined operations registered through
+    ``SimdramMachine.define_op`` run through here before they reach row
+    allocation, so a miscompiled template or a bad axiom rewrite surfaces
+    as a clear :class:`SynthesisError` instead of wrong in-DRAM results.
+
+    Slice graphs have a handful of inputs, so exhaustion is cheap; graphs
+    wider than ``max_inputs`` are rejected (define such ops via
+    ``compile_fn`` and cover them with their own tests).
+    """
+    names = aoig.input_names()
+    if len(names) > max_inputs:
+        raise ValueError(
+            f"{name!r}: {len(names)} inputs is too wide to verify "
+            f"exhaustively (limit {max_inputs}) — register via compile_fn "
+            "and validate externally")
+    lanes = 1 << len(names)
+    mask = (1 << lanes) - 1
+    assignment = {}
+    for i, pi in enumerate(names):
+        pat = 0
+        for lane in range(lanes):
+            if (lane >> i) & 1:
+                pat |= 1 << lane
+        assignment[pi] = pat
+    ref = aoig.evaluate(assignment, mask)
+    naive = aoig_to_mig_naive(aoig)
+    for g, form in ((naive, "naive MAJ/NOT substitution"),
+                    (optimize_mig(naive), "optimized MIG")):
+        got = g.evaluate(assignment, mask)
+        if got != ref:
+            wrong = sorted(o for o in ref if got.get(o) != ref[o])
+            raise SynthesisError(
+                f"{name!r}: {form} disagrees with the source AOIG on "
+                f"output(s) {wrong}")

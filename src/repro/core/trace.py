@@ -40,7 +40,10 @@ finished trace.  Hit/miss counters are exposed for the benchmark gate.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
+import weakref
 
 import numpy as np
 
@@ -218,19 +221,22 @@ class LoweredTrace:
 # id(prog) → (prog, trace); strong refs keep ids stable, LRU-bounded (a
 # hit refreshes recency) so ad-hoc programs (tests, experiments) cannot
 # grow it without bound and a sustained mixed workload cannot evict its
-# hottest program first
+# hottest program first.  Guarded by a lock: per-machine compile caches
+# share this memo, so concurrent sessions race on it otherwise.
 _LOWER_MEMO: dict[int, tuple[UProgram, "LoweredTrace"]] = {}
 _LOWER_MEMO_CAP = 256
+_LOWER_LOCK = threading.Lock()
 
 
 def lower_program(prog: UProgram) -> LoweredTrace:
     """Lower a compiled μProgram to its command trace (once per object)."""
-    hit = _LOWER_MEMO.get(id(prog))
-    if hit is not None:
-        # LRU move-to-end: eviction order is recency, not insertion —
-        # FIFO evicted the hottest program first under mixed workloads
-        _LOWER_MEMO[id(prog)] = _LOWER_MEMO.pop(id(prog))
-        return hit[1]
+    with _LOWER_LOCK:
+        hit = _LOWER_MEMO.get(id(prog))
+        if hit is not None:
+            # LRU move-to-end: eviction order is recency, not insertion —
+            # FIFO evicted the hottest program first under mixed workloads
+            _LOWER_MEMO[id(prog)] = _LOWER_MEMO.pop(id(prog))
+            return hit[1]
     flat = prog.flatten()
     drows = sorted({(r.array, r.bit) for u in flat for r in _uop_drows(u)})
     if any(arr == "cell" for arr, _ in drows):
@@ -249,9 +255,15 @@ def lower_program(prog: UProgram) -> LoweredTrace:
                          d_rows=tuple(drows), inputs=tuple(prog.inputs),
                          outputs=tuple(prog.outputs),
                          scratch=tuple(prog.scratch))
-    _LOWER_MEMO[id(prog)] = (prog, trace)
-    while len(_LOWER_MEMO) > _LOWER_MEMO_CAP:
-        del _LOWER_MEMO[next(iter(_LOWER_MEMO))]
+    with _LOWER_LOCK:
+        # re-check: another thread may have lowered the same program while
+        # we computed — keep the first trace so every caller sees one object
+        prior = _LOWER_MEMO.get(id(prog))
+        if prior is not None:
+            return prior[1]
+        _LOWER_MEMO[id(prog)] = (prog, trace)
+        while len(_LOWER_MEMO) > _LOWER_MEMO_CAP:
+            del _LOWER_MEMO[next(iter(_LOWER_MEMO))]
     return trace
 
 
@@ -262,42 +274,154 @@ def canonical_uops(prog: UProgram) -> list:
 
 
 # ---------------------------------------------------------------------------
-# Process-wide compile/lower cache (the μProgram Memory)
+# The μProgram Memory: an instantiable compile/lower cache
 # ---------------------------------------------------------------------------
 
-_COMPILE_CACHE: dict[tuple, tuple[UProgram, LoweredTrace]] = {}
-_COMPILE_STATS = {"hits": 0, "misses": 0}
+
+class TraceCache:
+    """A μProgram Memory: compile + lower once per ``(op, n_bits, optimize)``.
+
+    The paper's control unit keeps the finished μPrograms in a small
+    scratchpad (Fig. 7); this class mirrors it as a bounded LRU cache over
+    ``(UProgram, LoweredTrace)`` pairs with hit/miss/eviction counters.
+    One process-wide instance backs :func:`compile_trace` (and the default
+    :class:`~repro.simdram.machine.SimdramMachine`); every other machine
+    owns a private instance, so concurrent sessions never share compiles
+    or counters.
+
+    ``compile_fn(name, n_bits, optimize) → UProgram`` resolves a miss —
+    ``None`` means the process-wide op registry
+    (:func:`repro.core.circuits.compile_operation`).  ``capacity=None``
+    is unbounded.  All access is lock-guarded: hammering one cache from
+    many threads keeps counters exact and never compiles a key twice.
+    (The lock is deliberately held across the compile itself, so a cold
+    miss serializes other misses on the same cache — the workloads this
+    models compile a handful of keys once and then only hit; exactly-once
+    compiles and exact counters are worth more here than cold-path
+    concurrency.)
+    """
+
+    def __init__(self, capacity: int | None = None, compile_fn=None) -> None:
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        self.capacity = capacity
+        self._compile_fn = compile_fn
+        self._entries: collections.OrderedDict[
+            tuple, tuple[UProgram, LoweredTrace]] = collections.OrderedDict()
+        self._lock = threading.RLock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        _ALL_CACHES.add(self)
+
+    def _compile(self, name: str, n_bits: int, optimize: bool) -> UProgram:
+        if self._compile_fn is not None:
+            return self._compile_fn(name, n_bits, optimize)
+        from .circuits import compile_operation
+        return compile_operation(name, n_bits, optimize=optimize)
+
+    def get(self, name: str, n_bits: int,
+            optimize: bool = True) -> tuple[UProgram, LoweredTrace]:
+        """Fetch-or-compile the ``(UProgram, LoweredTrace)`` pair."""
+        key = (name, int(n_bits), bool(optimize))
+        # the whole miss path holds the lock: compiling outside it would
+        # let two threads synthesize the same key concurrently and tear
+        # the hit/miss counters
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self._hits += 1
+                self._entries.move_to_end(key)
+                return hit
+            self._misses += 1
+            prog = self._compile(name, n_bits, bool(optimize))
+            entry = (prog, lower_program(prog))
+            self._entries[key] = entry
+            while self.capacity is not None and \
+                    len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self._evictions += 1
+            return entry
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def stats(self) -> dict:
+        """{hits, misses, entries, hit_rate, capacity, evictions}."""
+        with self._lock:
+            h, m = self._hits, self._misses
+            return {"hits": h, "misses": m, "entries": len(self._entries),
+                    "hit_rate": h / (h + m) if h + m else 0.0,
+                    "capacity": self.capacity, "evictions": self._evictions}
+
+    def invalidate(self, name: str) -> int:
+        """Drop every cached width/optimize variant of one operation —
+        called when an op is (re)registered or unregistered so a stale
+        compile can never execute under the new definition.  Returns the
+        number of entries dropped."""
+        with self._lock:
+            victims = [k for k in self._entries if k[0] == name]
+            for k in victims:
+                del self._entries[k]
+            return len(victims)
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self._hits = self._misses = self._evictions = 0
+
+    def clear(self) -> None:
+        """Drop entries and counters (in place — aliases stay valid)."""
+        with self._lock:
+            self._entries.clear()
+            self.reset_stats()
+
+
+# every live TraceCache (weak refs: caches die with their machines) — a
+# process-wide op (re)registration must be able to evict stale compiles
+# from ALL of them, not just the global cache, because private machine
+# memories fall back to the process registry for names they don't define
+_ALL_CACHES: "weakref.WeakSet[TraceCache]" = weakref.WeakSet()
+
+
+def invalidate_everywhere(name: str) -> None:
+    """Drop every cached compile of ``name`` from every live TraceCache
+    (called by the op registry on re-registration/unregistration)."""
+    for cache in list(_ALL_CACHES):
+        cache.invalidate(name)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide compile/lower cache (the default machine's μProgram Memory)
+# ---------------------------------------------------------------------------
+
+GLOBAL_TRACE_CACHE = TraceCache()
+# legacy alias (tests/benchmarks introspect the raw mapping)
+_COMPILE_CACHE = GLOBAL_TRACE_CACHE._entries
 
 
 def compile_trace(name: str, n_bits: int,
                   optimize: bool = True) -> tuple[UProgram, LoweredTrace]:
     """Compile + lower an operation once per ``(op, n_bits, optimize)``.
 
-    Returns the cached ``(UProgram, LoweredTrace)`` pair; synthesis, row
-    allocation and lowering never re-run for a cached key.
+    Returns the cached ``(UProgram, LoweredTrace)`` pair from the
+    process-wide :data:`GLOBAL_TRACE_CACHE`; synthesis, row allocation and
+    lowering never re-run for a cached key.
     """
-    key = (name, int(n_bits), bool(optimize))
-    hit = _COMPILE_CACHE.get(key)
-    if hit is not None:
-        _COMPILE_STATS["hits"] += 1
-        return hit
-    _COMPILE_STATS["misses"] += 1
-    from .circuits import compile_operation
-    prog = compile_operation(name, n_bits, optimize=optimize)
-    entry = (prog, lower_program(prog))
-    _COMPILE_CACHE[key] = entry
-    return entry
+    return GLOBAL_TRACE_CACHE.get(name, n_bits, optimize)
 
 
 def trace_cache_stats() -> dict:
-    """{hits, misses, entries, hit_rate} of the compile/lower cache."""
-    h, m = _COMPILE_STATS["hits"], _COMPILE_STATS["misses"]
-    return {"hits": h, "misses": m, "entries": len(_COMPILE_CACHE),
-            "hit_rate": h / (h + m) if h + m else 0.0}
+    """{hits, misses, entries, hit_rate, ...} of the process-wide cache."""
+    return GLOBAL_TRACE_CACHE.stats()
 
 
 def reset_trace_cache_stats() -> None:
-    _COMPILE_STATS["hits"] = _COMPILE_STATS["misses"] = 0
+    GLOBAL_TRACE_CACHE.reset_stats()
 
 
 def clear_trace_cache() -> None:
@@ -305,6 +429,6 @@ def clear_trace_cache() -> None:
     measure a cold compile path.  The lowering memo is dropped too: a
     "cold compile" that still fetched memoized lowerings measured only cold
     synthesis, not the genuinely cold compile-and-lower path."""
-    _COMPILE_CACHE.clear()
-    _LOWER_MEMO.clear()
-    reset_trace_cache_stats()
+    GLOBAL_TRACE_CACHE.clear()
+    with _LOWER_LOCK:
+        _LOWER_MEMO.clear()

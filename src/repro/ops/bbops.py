@@ -31,25 +31,31 @@ import contextlib
 import jax
 import jax.numpy as jnp
 
-from ..core.backends import (PerfStats, execute_program,  # noqa: F401
-                             list_backends, set_default_backend,
-                             use_backend)
+from ..core.backends import (PerfStats, execute_lowered,  # noqa: F401
+                             execute_program, list_backends,
+                             set_default_backend, use_backend)
 from ..core.backends import timed as timed_execution
 from ..core.trace import compile_trace
 from ..core.uprogram import UProgram
 from ..simdram.layout import (LANE_WORD, BitplaneArray, from_bitplanes,
                               to_bitplanes)
+from ..simdram.machine import current_machine
 
 
 def compile_bbop(name: str, n_bits: int, optimize: bool = True) -> UProgram:
     """The μProgram Scratchpad: compile + lower once, reuse (paper Fig. 7).
 
-    Backed by the process-wide compile/lower cache in
-    :mod:`repro.core.trace` — chained ``bbop_*`` calls, pipelines and
-    ``greedy_decode`` all fetch the same finished
+    Backed by the ambient machine's μProgram Memory: the current session
+    machine's when one is in scope (``with machine.session():`` / a
+    machine pipeline), otherwise the process-wide compile/lower cache in
+    :mod:`repro.core.trace` (the default machine's) — chained ``bbop_*``
+    calls, pipelines and ``greedy_decode`` all fetch the same finished
     (μProgram, :class:`~repro.core.trace.LoweredTrace`) pair instead of
     re-running synthesis + row allocation per call.
     """
+    m = current_machine()
+    if m is not None:
+        return m.memory.get(name, n_bits, optimize)[0]
     return compile_trace(name, n_bits, optimize)[0]
 
 
@@ -97,15 +103,28 @@ def _check_banks(ops: list[BitplaneArray]) -> None:
 def _run_op(name: str, operands: dict[str, BitplaneArray], n_bits: int,
             signed_out: bool = False, out_bits: int | None = None,
             optimize: bool = True, backend: str | None = None,
-            keep_planes: bool = False):
-    """Compile-or-fetch + dispatch; returns planes or horizontal values."""
+            keep_planes: bool = False, machine=None, compiled=None):
+    """Compile-or-fetch + dispatch; returns planes or horizontal values.
+
+    ``machine`` (explicit, or the innermost open machine session) routes
+    the call through that machine's μProgram Memory and default backend;
+    otherwise the process-wide cache and backend default apply (the
+    default machine's configuration).  ``compiled`` short-circuits the
+    cache with an already-fetched ``(UProgram, LoweredTrace)`` pair
+    (bound ops pass theirs through so each call counts one cache access).
+    """
     ops = list(operands.values())
     _check_banks(ops)
-    prog = compile_bbop(name, n_bits, optimize)
-    outs = execute_program(
-        prog, {k: v.planes for k, v in operands.items()},
+    m = machine if machine is not None else current_machine()
+    if m is not None:
+        prog, trace = compiled or m.memory.get(name, n_bits, optimize)
+        backend = backend or m.backend
+    else:
+        prog, trace = compiled or compile_trace(name, n_bits, optimize)
+    outs = execute_lowered(
+        prog, trace, {k: v.planes for k, v in operands.items()},
         out_bits={prog.outputs[0]: out_bits} if out_bits else None,
-        backend=backend)
+        backend=backend, machine=m)
     first = ops[0]
     res = BitplaneArray(outs[prog.outputs[0]], out_bits or n_bits,
                         first.length, signed_out)
@@ -120,21 +139,22 @@ def _fused(*xs) -> bool:
 
 def _binary(name: str, a, b, n_bits: int, signed_out: bool = False,
             out_bits: int | None = None, optimize: bool = True,
-            backend: str | None = None):
+            backend: str | None = None, machine=None):
     keep = _fused(a, b)
     pa, _ = _as_planes(a, n_bits)
     pb, _ = _as_planes(b, n_bits)
     return _run_op(name, {"a": pa, "b": pb}, n_bits, signed_out=signed_out,
                    out_bits=out_bits, optimize=optimize, backend=backend,
-                   keep_planes=keep)
+                   keep_planes=keep, machine=machine)
 
 
 def _unary(name: str, a, n_bits: int, out_bits: int | None = None,
-           optimize: bool = True, backend: str | None = None):
+           optimize: bool = True, backend: str | None = None, machine=None):
     keep = _fused(a)
     pa, _ = _as_planes(a, n_bits)
     return _run_op(name, {"a": pa}, n_bits, out_bits=out_bits,
-                   optimize=optimize, backend=backend, keep_planes=keep)
+                   optimize=optimize, backend=backend, keep_planes=keep,
+                   machine=machine)
 
 
 def _flip_msb(x, n_bits: int):
@@ -208,12 +228,12 @@ def bbop_bitcount(a, n_bits: int = 8, **kw):
 # -- N-input reductions (paper: Y = src(1) ∘ src(2) ∘ src(3)) ----------------
 
 def _reduction(name: str, srcs, n_bits: int, optimize: bool = True,
-               backend: str | None = None):
+               backend: str | None = None, machine=None):
     assert len(srcs) == 3, "the compiled reduction μPrograms are 3-input"
     keep = _fused(*srcs)
     operands = {f"s{k}": _as_planes(s, n_bits)[0] for k, s in enumerate(srcs)}
     return _run_op(name, operands, n_bits, optimize=optimize,
-                   backend=backend, keep_planes=keep)
+                   backend=backend, keep_planes=keep, machine=machine)
 
 
 def bbop_and(srcs, n_bits: int = 8, **kw):
@@ -231,7 +251,7 @@ def bbop_xor(srcs, n_bits: int = 8, **kw):
 # -- predication (bbop_if_else dst, src_1, src_2, select, size, n) ------------
 
 def bbop_if_else(sel, a, b, n_bits: int = 8, optimize: bool = True,
-                 backend: str | None = None):
+                 backend: str | None = None, machine=None):
     keep = _fused(sel, a, b)
     pa, _ = _as_planes(a, n_bits)
     pb, _ = _as_planes(b, n_bits)
@@ -240,7 +260,8 @@ def bbop_if_else(sel, a, b, n_bits: int = 8, optimize: bool = True,
     else:
         ps, _ = _as_planes(sel.astype(jnp.uint32), 1)
     return _run_op("if_else", {"a": pa, "b": pb, "sel": ps}, n_bits,
-                   optimize=optimize, backend=backend, keep_planes=keep)
+                   optimize=optimize, backend=backend, keep_planes=keep,
+                   machine=machine)
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +293,12 @@ class simdram_pipeline(contextlib.AbstractContextManager):
     :meth:`perf_report` renders it — modeled end-to-end DRAM nanoseconds,
     nanojoules, and effective GOps/s per bank for the whole chain.
 
+    ``machine=`` (usually via ``SimdramMachine.pipeline()``) binds the whole
+    chain to one session machine: ops fetch from that machine's μProgram
+    Memory (including its user-defined ops), execute on its backend, and —
+    when timed — charge its own PerfStats with its own DRAM model, fully
+    isolated from any other machine in the process.
+
     ``model="replay"`` additionally replays every executed command trace on
     the cycle-accurate per-bank FSM array
     (:class:`~repro.simdram.timing.TraceReplayTiming`): one desynchronized
@@ -280,11 +307,15 @@ class simdram_pipeline(contextlib.AbstractContextManager):
     and analytic ns/nJ side by side (``replay_ns``/``replay_nj`` vs
     ``exec_ns``/``exec_nj``) plus the per-bank stall breakdown
     (``replay_tfaw_ns``/``replay_refresh_ns``/``replay_bank_spread_ns``).
+    ``refresh_phase=True`` threads the replay clock through the refresh
+    grid across ops (cross-op refresh phase) instead of anchoring every
+    op's windows at its own t=0.
     """
 
     def __init__(self, backend: str | None = None, banks: int | None = None,
                  timed: bool = False, perf_stats: PerfStats | None = None,
-                 perf_model=None, model: str | None = None):
+                 perf_model=None, model: str | None = None,
+                 refresh_phase: bool | None = None, machine=None):
         if model is not None and not isinstance(model, str):
             raise TypeError(
                 "model= selects the timing mode ('analytic' or 'replay'); "
@@ -292,30 +323,57 @@ class simdram_pipeline(contextlib.AbstractContextManager):
         self.backend = backend
         self.banks = banks
         self.stats = perf_stats
+        # any timing knob implies a timed pipeline — refresh_phase too,
+        # or passing it alone would silently measure nothing
         self._timed = (timed or perf_stats is not None
-                       or perf_model is not None or model is not None)
+                       or perf_model is not None or model is not None
+                       or refresh_phase is not None)
         self._perf_model = perf_model
-        self._mode = model
+        # refresh-phase threading is a replay-mode concept: asking for it
+        # without naming a mode means a replay pipeline
+        self._mode = model if model is not None else (
+            "replay" if refresh_phase is not None else None)
+        self._refresh_phase = refresh_phase
+        self._machine = machine
         self._ctx = None
         self._tctx = None
+        self._mctx = None
 
     def __enter__(self):
-        if self.backend is not None:
-            self._ctx = use_backend(self.backend)
-            self._ctx.__enter__()
-        if self._timed:
-            try:
+        if self._machine is not None:
+            # machine scope first: every op inside fetches from the
+            # machine's μProgram Memory and fires its scoped hooks
+            self._mctx = self._machine.session()
+            self._mctx.__enter__()
+        backend = self.backend
+        if backend is None and self._machine is not None:
+            backend = self._machine.backend
+        try:
+            if backend is not None:
+                self._ctx = use_backend(backend)
+                self._ctx.__enter__()
+            if self._timed:
+                if (self._machine is not None and self.stats is None
+                        and self._perf_model is None):
+                    # charge the machine's own accumulator (its model)
+                    self.stats = self._machine._stats_for(
+                        self._mode, self._refresh_phase)
+                    self._mode = self.stats.mode
                 self._tctx = timed_execution(stats=self.stats,
                                              model=self._perf_model,
-                                             mode=self._mode)
+                                             mode=self._mode,
+                                             refresh_phase=self._refresh_phase)
                 self.stats = self._tctx.__enter__()
-            except BaseException:
-                # __exit__ never runs when __enter__ raises — unwind the
-                # backend override here or it leaks process-wide
-                if self._ctx is not None:
-                    self._ctx.__exit__(None, None, None)
-                    self._ctx = None
-                raise
+        except BaseException:
+            # __exit__ never runs when __enter__ raises — unwind the
+            # scopes entered so far or they leak process-wide
+            if self._ctx is not None:
+                self._ctx.__exit__(None, None, None)
+                self._ctx = None
+            if self._mctx is not None:
+                self._mctx.__exit__(None, None, None)
+                self._mctx = None
+            raise
         return self
 
     def __exit__(self, *exc):
@@ -323,6 +381,8 @@ class simdram_pipeline(contextlib.AbstractContextManager):
             self._tctx.__exit__(*exc)
         if self._ctx is not None:
             self._ctx.__exit__(*exc)
+        if self._mctx is not None:
+            self._mctx.__exit__(*exc)
         return False
 
     def perf_report(self) -> str:

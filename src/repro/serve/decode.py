@@ -47,7 +47,8 @@ _MIN_LANES = 32          # one packed word — the tournament floor
 
 def simdram_argmax(values: jax.Array, n_bits: int = 8,
                    backend: str | None = None,
-                   perf_stats: PerfStats | None = None) -> jax.Array:
+                   perf_stats: PerfStats | None = None,
+                   machine=None) -> jax.Array:
     """Row-wise argmax of unsigned ``values (B, V)`` via a plane-resident
     max tournament, one bank per row.
 
@@ -64,7 +65,10 @@ def simdram_argmax(values: jax.Array, n_bits: int = 8,
     ``perf_stats`` runs the tournament under the timed execution layer,
     accumulating modeled DRAM cost (latency, energy, transposition) into
     the given :class:`~repro.core.backends.PerfStats` — pass one
-    accumulator across calls to meter a whole decode loop.
+    accumulator across calls to meter a whole decode loop.  ``machine``
+    binds the tournament to a :class:`~repro.simdram.machine.SimdramMachine`
+    session: its backend, its μProgram Memory, and (absent an explicit
+    ``perf_stats``) its own accumulator and DRAM model.
     """
     b, v = values.shape
     lanes = max(_MIN_LANES, 1 << (v - 1).bit_length())
@@ -72,7 +76,9 @@ def simdram_argmax(values: jax.Array, n_bits: int = 8,
     idx_bits = max(1, (lanes - 1).bit_length())
     idx = jnp.tile(jnp.arange(lanes, dtype=jnp.int32)[None, :], (b, 1))
     with simdram_pipeline(banks=b, backend=backend,
-                          perf_stats=perf_stats) as p:
+                          perf_stats=perf_stats, machine=machine,
+                          timed=machine is not None and perf_stats is None
+                          ) as p:
         cur_v = p.load(vals, n_bits)
         cur_i = p.load(idx, idx_bits)
         while cur_v.words > _MIN_LANES // 32:
@@ -89,7 +95,8 @@ def simdram_argmax(values: jax.Array, n_bits: int = 8,
 
 def simdram_greedy_token(logits: jax.Array, n_bits: int = 8,
                          backend: str | None = None,
-                         perf_stats: PerfStats | None = None) -> jax.Array:
+                         perf_stats: PerfStats | None = None,
+                         machine=None) -> jax.Array:
     """Greedy token per sequence, selected in-memory.
 
     Logits ``(B, V)`` are affinely quantized per row to ``n_bits`` unsigned
@@ -106,13 +113,15 @@ def simdram_greedy_token(logits: jax.Array, n_bits: int = 8,
     q = jnp.round((logits - lo) * scale)
     q = jnp.clip(jnp.where(finite, q, 0), 0, 2 ** n_bits - 1)
     return simdram_argmax(q.astype(jnp.int32), n_bits=n_bits,
-                          backend=backend, perf_stats=perf_stats)
+                          backend=backend, perf_stats=perf_stats,
+                          machine=machine)
 
 
 def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
                   max_seq: int | None = None, extra_batch: dict | None = None,
                   sampler: str = "host", sampler_backend: str | None = None,
-                  sampler_perf: PerfStats | None = None):
+                  sampler_perf: PerfStats | None = None,
+                  sampler_machine=None):
     """e2e greedy decoding loop (examples/tests; single host).
 
     ``sampler="simdram"`` offloads greedy token selection to the
@@ -120,12 +129,17 @@ def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
     is the plain ``jnp.argmax``.  ``sampler_perf`` accumulates the
     tournament's modeled DRAM cost across every decoded token —
     ``sampler_perf.total_ns / steps`` is the modeled sampling cost per
-    token.
+    token.  ``sampler_machine`` binds sampling to a
+    :class:`~repro.simdram.machine.SimdramMachine` session (its backend,
+    μProgram Memory and — absent ``sampler_perf`` — its own accumulator),
+    so concurrent decode services with different DRAM configs stay
+    isolated.
     """
     if sampler == "simdram":
         def pick(logits):
             return simdram_greedy_token(logits, backend=sampler_backend,
-                                        perf_stats=sampler_perf)
+                                        perf_stats=sampler_perf,
+                                        machine=sampler_machine)
     elif sampler == "host":
         def pick(logits):
             return jnp.argmax(logits, -1)

@@ -41,9 +41,22 @@ _PERF_HOOKS: list = []
 
 def register_transpose_hook(hook) -> None:
     """Register ``hook(kind: str, n_bits: int, lanes: int)`` to observe every
-    transposition-unit pass (``kind`` is "to" or "from")."""
+    transposition-unit pass (``kind`` is "to" or "from").
+
+    These module-level hooks are process-wide plumbing: the timed execution
+    layer and the machine layer each register exactly one forwarder here.
+    For observation scoped to a single session, prefer
+    ``SimdramMachine.register_transpose_hook`` — those fire only for
+    passes inside that machine's scope.
+    """
     if hook not in _PERF_HOOKS:
         _PERF_HOOKS.append(hook)
+
+
+def unregister_transpose_hook(hook) -> None:
+    """Remove a previously-registered transposition hook (no-op if absent)."""
+    if hook in _PERF_HOOKS:
+        _PERF_HOOKS.remove(hook)
 
 
 # in-DRAM data-movement hooks, called as hook(kind, n_rows, banks) whenever
@@ -63,9 +76,16 @@ def register_movement_hook(hook) -> None:
     to observe in-DRAM row relocations (``kind`` is "intra" or "inter";
     ``banks`` is the destination bank count of an inter-bank scatter and
     ``planes`` the scattered plane array — both None for gathers and
-    intra-bank hops)."""
+    intra-bank hops).  Scoped per-session observation goes through
+    ``SimdramMachine.register_movement_hook`` instead."""
     if hook not in _MOVE_HOOKS:
         _MOVE_HOOKS.append(hook)
+
+
+def unregister_movement_hook(hook) -> None:
+    """Remove a previously-registered movement hook (no-op if absent)."""
+    if hook in _MOVE_HOOKS:
+        _MOVE_HOOKS.remove(hook)
 
 
 def _fire_movement(kind: str, n_rows: int, banks: int | None = None,

@@ -1,0 +1,438 @@
+"""SimdramMachine — a session-scoped end-to-end SIMDRAM instance.
+
+The paper's contribution is a *framework*: "a flexible mechanism to support
+the implementation of arbitrary user-defined operations", three steps from
+an AND/OR/NOT description to in-DRAM execution.  :class:`SimdramMachine`
+is that framework as one object.  A machine owns the complete end-to-end
+configuration —
+
+* the DRAM substrate: a :class:`~repro.simdram.timing.DRAMTiming` (and the
+  :class:`~repro.simdram.timing.SimdramPerfModel` built from it), a bank
+  count, and an execution-backend choice;
+* its **μProgram Memory**: a private, capacity-bounded
+  :class:`~repro.core.trace.TraceCache` holding the compiled + lowered
+  ``(UProgram, LoweredTrace)`` pairs of every operation the session runs;
+* its **operation registry**: the 16 built-ins plus any operation the user
+  defines with :meth:`define_op` (paper Steps 1–2: AOIG → MAJ/NOT synthesis
+  → row allocation → μProgram → lowered command trace);
+* its own :class:`~repro.core.backends.PerfStats` accumulator and its own
+  transpose/movement hook lists, scoped to work executed under this
+  machine.
+
+Two machines with different timings, banks, backends or cache capacities
+coexist in one process without sharing any of the above — the configuration
+is explicit and isolated instead of ambient process globals.
+
+The three paper steps as API::
+
+    m = SimdramMachine(timing=DRAMTiming(...), banks=4, backend="pallas")
+
+    def build_gated_sub(g):                       # Step 1: the AOIG
+        a, b, gate, w = (g.input(n) for n in ("a", "b", "gate", "borrow"))
+        bg = g.gate_and(b, gate)
+        axb = g.gate_xor(a, bg)
+        g.add_output("out", g.gate_xor(axb, w))
+        g.add_output("borrow", g.gate_or_node(
+            g.gate_and(lit_not(a), bg), g.gate_and(w, lit_not(axb))))
+
+    gated_sub = m.define_op(                      # Steps 1-2: synthesize,
+        "gated_sub", build_gated_sub,             # allocate rows, lower
+        invariants={"gate": DRow("gate", 0, fixed=True)},
+        states={"borrow": 0})
+
+    out = gated_sub(a, b, gmask, n_bits=8)        # Step 3: execute — on
+    out = m.op("gated_sub")(a, b, gmask, n_bits=8)  # any registered backend
+
+The **default machine** (:func:`default_machine`) is the machine behind the
+ambient module-level surface: its μProgram Memory *is* the process-wide
+compile/lower cache (``repro.core.trace.GLOBAL_TRACE_CACHE``), its registry
+is the process-wide op table (``repro.core.circuits``), and its backend
+resolves to the process default, so ``bbop_*`` / ``simdram_pipeline`` /
+``timed()`` keep working unchanged as thin delegates of it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax.numpy as jnp
+
+from ..core.backends import PerfStats, execute_lowered
+from ..core.backends import timed as _timed_execution
+from ..core.compiler import SliceSpec, compile_slice
+from ..core.graph import LogicGraph
+from ..core.trace import GLOBAL_TRACE_CACHE, TraceCache
+from .layout import (BitplaneArray, register_movement_hook,
+                     register_transpose_hook)
+from .timing import DRAMEnergy, DRAMTiming, SimdramPerfModel
+
+# innermost-last, per-thread stack of machines whose session scope is
+# open; bbop_* and the layout hooks consult it so work inside ``with
+# machine.session():`` (or a machine pipeline) routes through that
+# machine's μProgram Memory, backend and scoped hooks.  Thread-local:
+# one thread's open session must never leak into another thread's ops —
+# that is the isolation this API exists to provide.
+_SCOPE = threading.local()
+
+
+def _scope_stack() -> list:
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    return stack
+
+
+def current_machine() -> "SimdramMachine | None":
+    """The innermost machine with an open session scope on this thread
+    (None outside any session)."""
+    stack = _scope_stack()
+    return stack[-1] if stack else None
+
+
+# layout-traffic forwarders: scoped hooks observe the work attributed to
+# the *innermost* open session only (the same attribution rule PerfStats
+# owner-filtering uses) — re-entered sessions therefore fire each hook
+# exactly once per pass, and nested foreign sessions don't cross-observe
+def _forward_transpose(kind: str, n_bits: int, lanes: int) -> None:
+    m = current_machine()
+    if m is not None:
+        for hook in m._transpose_hooks:
+            hook(kind, n_bits, lanes)
+
+
+def _forward_movement(kind: str, n_rows: int, banks: int | None = None,
+                      planes=None) -> None:
+    m = current_machine()
+    if m is not None:
+        for hook in m._movement_hooks:
+            hook(kind, n_rows, banks)
+
+
+register_transpose_hook(_forward_transpose)
+register_movement_hook(_forward_movement)
+
+# let the timed execution layer attribute work to the innermost open
+# machine session without importing this module eagerly
+from ..core import backends as _backends  # noqa: E402
+
+_backends._current_machine = current_machine
+
+
+class BoundOp:
+    """A machine operation bound for execution (what :meth:`SimdramMachine.op`
+    returns).  Calling it runs paper Step 3: fetch the compiled trace from
+    the machine's μProgram Memory and dispatch it to the machine's backend.
+
+    Positional operands bind to the μProgram's declared input arrays in
+    order; each may be a horizontal array (transposed in, transposed out —
+    the compat path) or a plane-resident
+    :class:`~repro.simdram.layout.BitplaneArray` (planes in, planes out).
+    """
+
+    def __init__(self, machine: "SimdramMachine", name: str) -> None:
+        self.machine = machine
+        self.name = name
+
+    def __repr__(self) -> str:
+        return f"<BoundOp {self.name!r} on {self.machine!r}>"
+
+    def program(self, n_bits: int = 8, optimize: bool = True):
+        """The cached ``(UProgram, LoweredTrace)`` pair for this width."""
+        return self.machine.memory.get(self.name, n_bits, optimize)
+
+    def __call__(self, *operands, n_bits: int = 8, out_bits: int | None = None,
+                 signed_out: bool = False, optimize: bool = True,
+                 backend: str | None = None):
+        from ..ops.bbops import _run_op
+        with self.machine.session():
+            # one μProgram-Memory access per call (the fetched pair rides
+            # through to execution), and operand layout conversion happens
+            # inside the session so the machine's scoped hooks observe the
+            # input transposition passes too
+            compiled = self.program(n_bits, optimize)
+            prog = compiled[0]
+            if len(operands) != len(prog.inputs):
+                raise TypeError(
+                    f"{self.name} takes {len(prog.inputs)} operands "
+                    f"{prog.inputs}, got {len(operands)}")
+            keep = any(isinstance(x, BitplaneArray) for x in operands)
+            bound = {}
+            for arr_name, x in zip(prog.inputs, operands):
+                if not isinstance(x, BitplaneArray):
+                    x = BitplaneArray.from_values(jnp.asarray(x), n_bits)
+                bound[arr_name] = x
+            return _run_op(self.name, bound, n_bits, signed_out=signed_out,
+                           out_bits=out_bits, optimize=optimize,
+                           backend=backend, keep_planes=keep,
+                           machine=self.machine, compiled=compiled)
+
+
+class SimdramMachine:
+    """One isolated, fully-configured SIMDRAM session (see module docstring).
+
+    Parameters
+    ----------
+    timing / energy : the DRAM substrate (defaults: DDR4-2400 per paper
+        Table 2).  ``model`` overrides both with a complete
+        :class:`SimdramPerfModel`.
+    banks : default bank count for :meth:`pipeline` (1 = unbanked).
+    backend : default execution backend for every op this machine runs
+        (``None`` = follow the process default).
+    cache_capacity : μProgram Memory bound (LRU entries; ``None`` =
+        unbounded).  The paper's scratchpad holds few compiled programs;
+        a bounded cache makes eviction behavior explicit and testable.
+    mode : ``"analytic"`` or ``"replay"`` — how this machine's
+        :attr:`stats` accumulator meters execution.
+    refresh_phase : replay mode only — thread the accumulated replay clock
+        through the refresh-window grid across ops (cross-op refresh
+        phase) instead of re-anchoring each op at t=0.
+    """
+
+    def __init__(self, timing: DRAMTiming | None = None,
+                 energy: DRAMEnergy | None = None,
+                 model: SimdramPerfModel | None = None,
+                 banks: int = 1, backend: str | None = None,
+                 cache_capacity: int | None = 64,
+                 mode: str = "analytic", refresh_phase: bool = False,
+                 memory: TraceCache | None = None) -> None:
+        if model is not None and (timing is not None or energy is not None):
+            raise ValueError("pass either a complete model or its "
+                             "timing/energy parts, not both")
+        if banks < 1:
+            raise ValueError(f"banks must be >= 1, got {banks}")
+        self.model = model or SimdramPerfModel(timing=timing, energy=energy)
+        self.timing = self.model.timing
+        self.banks = int(banks)
+        self.backend = backend
+        self.stats = PerfStats(model=self.model, mode=mode,
+                               refresh_phase=refresh_phase, owner=self)
+        self._ops: dict[str, object] = {}   # name → compile_fn(n_bits, opt)
+        if memory is not None:
+            # advanced: adopt an existing μProgram Memory.  Its own bound
+            # applies (cache_capacity is not consulted), and its compile
+            # hook is wired to this machine's registry if unset so
+            # define_op'd ops resolve — a cache already wired to another
+            # machine keeps that machine's registry (shared-memory setups
+            # share the first owner's op table).
+            if memory._compile_fn is None:
+                memory._compile_fn = self._compile
+            self.memory = memory
+        else:
+            self.memory = TraceCache(capacity=cache_capacity,
+                                     compile_fn=self._compile)
+        self._transpose_hooks: list = []
+        self._movement_hooks: list = []
+
+    def __repr__(self) -> str:
+        be = self.backend or "default"
+        return (f"SimdramMachine(banks={self.banks}, backend={be!r}, "
+                f"ops={len(self._ops)} user-defined)")
+
+    # -- Step 1+2: operation definition -------------------------------------
+    def _compile(self, name: str, n_bits: int, optimize: bool):
+        fn = self._ops.get(name)
+        if fn is not None:
+            return fn(n_bits, optimize)
+        from ..core.circuits import compile_operation
+        return compile_operation(name, n_bits, optimize=optimize)
+
+    def define_op(self, name: str, build_graph=None, spec=None, *,
+                  invariants: dict | None = None, states: dict | None = None,
+                  arrays_in: tuple | None = None, out_array: str | None = "out",
+                  epilogue_outputs: dict | None = None, compile_fn=None,
+                  validate: bool = True, override: bool = False) -> BoundOp:
+        """Register a user-defined operation with this machine (Steps 1–2).
+
+        Three entry points, from highest- to lowest-level:
+
+        * ``build_graph(g: LogicGraph)`` — the paper's Step-1 input: an
+          AND/OR/NOT description of the op's 1-bit slice.  Primary inputs
+          not named in ``invariants``/``states`` become the op's operand
+          arrays (``arrays_in`` overrides the inferred order); ``states``
+          are loop-carried values (e.g. a carry) with their initial value,
+          ``invariants`` bind PIs to fixed rows, ``out_array`` /
+          ``epilogue_outputs`` place results — the same vocabulary as
+          :class:`~repro.core.compiler.SliceSpec`.
+        * ``spec=SliceSpec(...)`` — a pre-built slice spec.
+        * ``compile_fn=(n_bits, optimize) -> UProgram`` — full control for
+          composite/tree ops (build with ``compile_slice`` /
+          ``compile_flat`` / ``rebase`` / ``concat_programs``).
+
+        The op is synthesized (AOIG → optimized MIG), row-allocated,
+        lowered to the command-trace IR on first use, cached in this
+        machine's μProgram Memory, and immediately executable on **all**
+        registered backends — including replay timing — with no other code
+        change.  ``validate=True`` checks the Step-1 synthesis: the
+        optimized MIG must be functionally equivalent to the naive
+        MAJ/NOT substitution on every input assignment.
+
+        On the :func:`default_machine`, definition lands in the
+        process-wide op registry so the ambient ``bbop``-style surface
+        sees it too.  Returns the bound op, ready to call.
+        """
+        n_entry = sum(x is not None for x in (build_graph, spec, compile_fn))
+        if n_entry != 1:
+            raise TypeError("define_op needs exactly one of build_graph, "
+                            "spec or compile_fn")
+        if spec is None and build_graph is not None:
+            g = LogicGraph()
+            build_graph(g)
+            if not g.outputs:
+                raise ValueError(f"{name!r}: build_graph declared no outputs")
+            if validate:
+                from ..core.synthesis import check_synthesis
+                check_synthesis(g, name=name)
+            bound_names = set(invariants or {}) | set(states or {})
+            missing = bound_names - set(g.input_names())
+            if missing:
+                raise ValueError(
+                    f"{name!r}: invariants/states name unknown inputs "
+                    f"{sorted(missing)} (graph inputs: {g.input_names()})")
+            if arrays_in is None:
+                arrays_in = tuple(n for n in g.input_names()
+                                  if n not in bound_names)
+            spec = SliceSpec(name, build_graph, tuple(arrays_in),
+                             invariants=dict(invariants or {}),
+                             states=dict(states or {}),
+                             out_array=out_array,
+                             epilogue_outputs=dict(epilogue_outputs or {}))
+        if compile_fn is None:
+            the_spec = spec
+
+            def compile_fn(n_bits, optimize=True, _spec=the_spec):
+                return compile_slice(_spec, n_bits, optimize=optimize)
+
+        self._register(name, compile_fn, override=override)
+        return self.op(name)
+
+    def _register(self, name: str, compile_fn, override: bool) -> None:
+        if not override and name in self.ops():
+            raise ValueError(f"operation {name!r} already defined on this "
+                             "machine (pass override=True to replace it)")
+        self._ops[name] = compile_fn
+        # a redefinition must not serve the old definition's compiles
+        self.memory.invalidate(name)
+
+    def ops(self) -> tuple[str, ...]:
+        """Every operation this machine can execute (registry + local)."""
+        from ..core.circuits import list_operations
+        return tuple(sorted(set(list_operations()) | set(self._ops)))
+
+    # -- Step 3: execution ---------------------------------------------------
+    def op(self, name: str) -> BoundOp:
+        """Bind a registered operation for execution: ``m.op("x")(a, b)``."""
+        if name not in self.ops():
+            raise KeyError(f"unknown operation {name!r}; this machine "
+                           f"knows {self.ops()}")
+        return BoundOp(self, name)
+
+    @contextlib.contextmanager
+    def session(self):
+        """Open this machine's scope (on this thread): every ``bbop_*``
+        call inside routes through this machine's μProgram Memory and
+        backend, and this machine's scoped transpose/movement hooks
+        observe the layout traffic attributed to it (innermost session
+        wins).  Re-entrant; machine pipelines and bound ops open it
+        implicitly."""
+        stack = _scope_stack()
+        stack.append(self)
+        try:
+            yield self
+        finally:
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i] is self:
+                    del stack[i]
+                    break
+
+    def _stats_for(self, mode: str | None,
+                   refresh_phase: bool | None) -> PerfStats:
+        """The machine accumulator, or a fresh one when the requested
+        timing mode disagrees with it (an accumulator cannot switch
+        mid-flight)."""
+        want_mode = mode or self.stats.mode
+        want_phase = self.stats.refresh_phase if refresh_phase is None \
+            else refresh_phase
+        if want_mode == self.stats.mode and \
+                want_phase == self.stats.refresh_phase:
+            return self.stats
+        return PerfStats(model=self.model, mode=want_mode,
+                         refresh_phase=want_phase, owner=self)
+
+    @contextlib.contextmanager
+    def timed(self, mode: str | None = None, stats: PerfStats | None = None,
+              refresh_phase: bool | None = None):
+        """Timed execution under this machine: like
+        :func:`repro.core.backends.timed` but charging the machine's own
+        accumulator (with the machine's model) by default, inside the
+        machine's session scope.  An explicit ``stats`` accumulator whose
+        mode/refresh-phase disagrees with the requested one raises, same
+        as the core ``timed()``."""
+        st = stats if stats is not None else \
+            self._stats_for(mode, refresh_phase)
+        with self.session():
+            with _timed_execution(stats=st, mode=mode,
+                                  refresh_phase=refresh_phase) as s:
+                yield s
+
+    def pipeline(self, banks: int | None = None, backend: str | None = None,
+                 **kw):
+        """A plane-resident :class:`~repro.ops.bbops.simdram_pipeline`
+        bound to this machine: ops inside fetch from this machine's
+        μProgram Memory, execute on its backend, and (``timed=True``)
+        charge its PerfStats.  ``banks`` defaults to the machine's."""
+        from ..ops.bbops import simdram_pipeline
+        if banks is None and self.banks > 1:
+            banks = self.banks
+        return simdram_pipeline(banks=banks, backend=backend, machine=self,
+                                **kw)
+
+    # -- scoped instrumentation ----------------------------------------------
+    def register_transpose_hook(self, hook) -> None:
+        """``hook(kind, n_bits, lanes)`` fires for transposition-unit passes
+        inside this machine's session scope only."""
+        if hook not in self._transpose_hooks:
+            self._transpose_hooks.append(hook)
+
+    def register_movement_hook(self, hook) -> None:
+        """``hook(kind, n_rows, banks)`` fires for in-DRAM row relocations
+        inside this machine's session scope only."""
+        if hook not in self._movement_hooks:
+            self._movement_hooks.append(hook)
+
+    def cache_stats(self) -> dict:
+        """μProgram Memory counters: {hits, misses, entries, hit_rate,
+        capacity, evictions}."""
+        return self.memory.stats()
+
+    def perf_report(self) -> str:
+        """Render the machine accumulator (see :meth:`PerfStats.report`)."""
+        return self.stats.report()
+
+
+class _DefaultMachine(SimdramMachine):
+    """The machine behind the ambient module-level surface.
+
+    Its μProgram Memory is the process-wide compile/lower cache and its op
+    registry is the process-wide table in :mod:`repro.core.circuits`, so
+    ``bbop_*`` / ``simdram_pipeline`` / ``timed()`` (which consult those
+    globals directly) are thin delegates of this machine by construction.
+    Ops defined here are visible process-wide.
+    """
+
+    def __init__(self) -> None:
+        super().__init__(backend=None, banks=1, memory=GLOBAL_TRACE_CACHE)
+
+    def _register(self, name: str, compile_fn, override: bool) -> None:
+        from ..core.circuits import register_operation
+        register_operation(name, compile_fn, override=override)
+
+
+_DEFAULT_MACHINE: SimdramMachine | None = None
+
+
+def default_machine() -> SimdramMachine:
+    """The process-default :class:`SimdramMachine` (created on first use)."""
+    global _DEFAULT_MACHINE
+    if _DEFAULT_MACHINE is None:
+        _DEFAULT_MACHINE = _DefaultMachine()
+    return _DEFAULT_MACHINE

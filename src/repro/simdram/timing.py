@@ -182,17 +182,26 @@ class _RankState:
     (ACTs may not issue inside ``[k·tREFI, k·tREFI + tRFC)``).  All three
     only ever *delay* an ACT, so replay latency remains a superset of the
     analytic command sum.
+
+    ``phase`` shifts the refresh-window grid: refresh windows are anchored
+    in *rank* time, not per-op time, so a replay that starts ``phase``
+    cycles after the previous refresh epoch sees its first window after
+    ``tREFI − phase`` local cycles instead of ``tREFI``.  The timed
+    execution layer threads its accumulated replay clock through here
+    (``PerfStats(refresh_phase=True)``) so ops shorter than tREFI still
+    accrue their share of refresh stall inside long pipelines.
     """
 
-    __slots__ = ("c_rrd", "c_faw", "c_refi", "c_rfc", "last_act", "acts",
-                 "tfaw_stall", "refresh_stall", "n_refresh_stalls")
+    __slots__ = ("c_rrd", "c_faw", "c_refi", "c_rfc", "phase", "last_act",
+                 "acts", "tfaw_stall", "refresh_stall", "n_refresh_stalls")
 
     def __init__(self, c_rrd: int, c_faw: int, c_refi: int,
-                 c_rfc: int) -> None:
+                 c_rfc: int, phase: int = 0) -> None:
         self.c_rrd = c_rrd
         self.c_faw = c_faw
         self.c_refi = c_refi
         self.c_rfc = c_rfc
+        self.phase = phase
         self.last_act: int | None = None
         self.acts: list[int] = []          # issue cycles of the last 4 ACTs
         self.tfaw_stall = 0
@@ -209,9 +218,16 @@ class _RankState:
                 self.tfaw_stall += gate - t
                 t = gate
         if self.c_refi:
-            k = t // self.c_refi
-            if k >= 1 and t < k * self.c_refi + self.c_rfc:
-                end = k * self.c_refi + self.c_rfc
+            # rank time = local replay time + phase since the last epoch.
+            # k >= 1 models the freshly-refreshed bank of a standalone
+            # replay (no window at its own t=0); with a threaded phase the
+            # epoch-0 window is real — an op whose clock lands just past a
+            # tREFI boundary starts *inside* that window and must stall
+            # out of it (phase > 0 lifts the guard for k == 0).
+            ta = t + self.phase
+            k = ta // self.c_refi
+            if (k >= 1 or self.phase) and ta < k * self.c_refi + self.c_rfc:
+                end = k * self.c_refi + self.c_rfc - self.phase
                 self.refresh_stall += end - t
                 self.n_refresh_stalls += 1
                 t = end
@@ -269,20 +285,25 @@ class TraceReplayTiming:
             raise ValueError(f"unknown desync policy {t.desync_policy!r} "
                              "(expected 'desync' or 'lockstep')")
 
-    def _rank(self, coupled: bool) -> _RankState:
+    def _rank(self, coupled: bool, phase: int = 0) -> _RankState:
         return _RankState(self.c_rrd if coupled else 0,
                           self.c_faw if coupled else 0,
-                          self.c_refi, self.c_rfc)
+                          self.c_refi, self.c_rfc, phase=phase)
 
     def replay(self, trace, banks: int = 1, offsets_ns=None,
-               policy: str | None = None) -> ReplayResult:
+               policy: str | None = None,
+               refresh_phase_ns: float = 0.0) -> ReplayResult:
         """Replay ``trace`` on ``banks`` per-bank FSMs.
 
         ``offsets_ns`` optionally gives each bank's issue offset (bank *k*'s
         stream may not start before ``offsets_ns[k]``); ``policy`` overrides
         the timing's ``desync_policy`` for this replay.  Refresh windows are
-        anchored at this replay's t=0 (each op replays standalone), so only
-        ops that individually span a tREFI interval accrue refresh stall.
+        anchored ``refresh_phase_ns`` after the previous refresh epoch —
+        with the default 0, each op replays standalone from t=0, so only
+        ops that individually span a tREFI interval accrue refresh stall;
+        a replay-mode :class:`~repro.core.backends.PerfStats` built with
+        ``refresh_phase=True`` threads its accumulated pipeline clock
+        through here instead, so refresh bites across op boundaries.
         """
         policy = policy or self.timing.desync_policy
         if policy not in ("desync", "lockstep"):
@@ -305,7 +326,10 @@ class TraceReplayTiming:
             offsets = [0] * banks if offsets_ns is None else \
                 [math.ceil(o / tck) for o in offsets_ns]
         n_banks = len(offsets)
-        rank = self._rank(coupled=not lockstep)
+        phase = 0
+        if self.c_refi and refresh_phase_ns:
+            phase = math.ceil(refresh_phase_ns / tck) % self.c_refi
+        rank = self._rank(coupled=not lockstep, phase=phase)
         c_ras, c_rp, c_rc = self.c_ras, self.c_rp, self.c_rc
         n_seq = len(kinds)
         # per-bank FSM state (the bank powers up idle and precharged)
@@ -378,12 +402,14 @@ class SimdramPerfModel:
         self.transposition = transposition or TranspositionModel()
         self.replay_timing = replay or TraceReplayTiming(self.timing)
 
-    def replay_result(self, trace, banks: int = 1,
-                      offsets_ns=None) -> ReplayResult:
+    def replay_result(self, trace, banks: int = 1, offsets_ns=None,
+                      refresh_phase_ns: float = 0.0) -> ReplayResult:
         """Replay a lowered trace on the per-bank FSM array (measured-style
-        latency, tFAW/refresh windows, optional per-bank issue offsets)."""
+        latency, tFAW/refresh windows, optional per-bank issue offsets and
+        cross-op refresh phase)."""
         return self.replay_timing.replay(trace, banks=banks,
-                                         offsets_ns=offsets_ns)
+                                         offsets_ns=offsets_ns,
+                                         refresh_phase_ns=refresh_phase_ns)
 
     def replay_latency_ns(self, trace, banks: int = 1) -> float:
         return self.replay_result(trace, banks=banks).ns

@@ -1,0 +1,126 @@
+"""Thread-safety of the compile/lower caches.
+
+The process-wide compile cache used to be a plain dict with bare int
+counter mutation; per-machine μProgram Memories make concurrent compile
+traffic likelier (one service thread per machine), so both the
+:class:`~repro.core.trace.TraceCache` and the lowering memo are now
+lock-guarded.  These tests hammer them from multiple threads and assert
+the invariants a race would break: exact counters, one compile per key,
+and bounded size.
+"""
+import threading
+
+import pytest
+
+from repro.core.trace import (GLOBAL_TRACE_CACHE, TraceCache, compile_trace,
+                              lower_program)
+from repro.core.uprogram import AAP, DRow, P_T0, UProgram
+
+OPS = ("addition", "subtraction", "greater", "relu")
+WIDTHS = (4, 8)
+THREADS = 2
+ROUNDS = 40
+
+
+def _hammer(cache, errors, barrier, check_identity=True):
+    try:
+        barrier.wait(timeout=30)
+        for r in range(ROUNDS):
+            for op in OPS:
+                for n in WIDTHS:
+                    prog, trace = cache.get(op, n, True)
+                    again, t2 = cache.get(op, n, True)
+                    # an unbounded cache must hand every thread the same
+                    # objects (a bounded one may legitimately re-compile
+                    # after a concurrent eviction)
+                    if check_identity and (again is not prog
+                                           or t2 is not trace):
+                        raise AssertionError(
+                            f"cache returned different objects for {op}/{n}")
+    except BaseException as e:       # noqa: BLE001 — surfaced by the test
+        errors.append(e)
+
+
+def test_two_thread_compile_stress_exact_counters():
+    cache = TraceCache()
+    errors: list = []
+    barrier = threading.Barrier(THREADS)
+    threads = [threading.Thread(target=_hammer,
+                                args=(cache, errors, barrier))
+               for _ in range(THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    st = cache.stats()
+    total = THREADS * ROUNDS * len(OPS) * len(WIDTHS) * 2
+    n_keys = len(OPS) * len(WIDTHS)
+    # lock-guarded counters are exact: every get is a hit or a miss, and
+    # each key compiled exactly once process-wide
+    assert st["hits"] + st["misses"] == total
+    assert st["misses"] == n_keys
+    assert st["entries"] == n_keys
+
+
+def test_threaded_gets_against_bounded_cache():
+    """Eviction under contention: the cache never exceeds its capacity and
+    the counters still balance."""
+    cache = TraceCache(capacity=3)
+    errors: list = []
+    barrier = threading.Barrier(THREADS)
+    threads = [threading.Thread(target=_hammer,
+                                args=(cache, errors, barrier, False))
+               for _ in range(THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    st = cache.stats()
+    assert st["entries"] <= 3
+    assert st["hits"] + st["misses"] == THREADS * ROUNDS * len(OPS) * \
+        len(WIDTHS) * 2
+    assert st["evictions"] == st["misses"] - st["entries"]
+
+
+def test_threaded_lower_memo():
+    """Concurrent lower_program on a shared set of ad-hoc μPrograms: one
+    trace per program object, no torn LRU state."""
+    progs = [UProgram(name=f"toy{i}", n_bits=4,
+                      prologue=[AAP(DRow("a", 0), (P_T0,))],
+                      body=[], body_reps=0, inputs=("a",), outputs=("a",))
+             for i in range(8)]
+    results: dict[int, list] = {i: [] for i in range(len(progs))}
+    errors: list = []
+    barrier = threading.Barrier(THREADS)
+
+    def worker():
+        try:
+            barrier.wait(timeout=30)
+            for _ in range(ROUNDS):
+                for i, p in enumerate(progs):
+                    results[i].append(lower_program(p))
+        except BaseException as e:   # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    for i, traces in results.items():
+        assert len(traces) == THREADS * ROUNDS
+        assert all(t is traces[0] for t in traces), f"prog {i} re-lowered"
+
+
+def test_global_cache_is_the_shared_instance():
+    prog, trace = compile_trace("addition", 8)
+    assert GLOBAL_TRACE_CACHE.get("addition", 8)[1] is trace
+    assert ("addition", 8, True) in GLOBAL_TRACE_CACHE
+
+
+def test_trace_cache_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        TraceCache(capacity=0)
