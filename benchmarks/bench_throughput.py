@@ -11,7 +11,7 @@ including transposition/movement overhead; ``rowscale16_gops`` rescales the
 same charged command stream to a full 8 kB row × 16 banks for the
 paper-comparable Fig. 9/10 speedup and efficiency columns.
 
-Two gated sections ride along under ``--smoke``:
+Three gated sections ride along under ``--smoke``:
 
 * ``cache/…`` — compile/lower-cache hot-path speedup of an 8-op chained
   pipeline (cold synthesis+allocation+lowering vs warm cache fetch) with
@@ -25,9 +25,18 @@ Two gated sections ride along under ``--smoke``:
   (unbanked and banked) reporting replayed vs analytic ns/nJ side by
   side.  The gates require ``replay_ns ≥ lockstep_ns ≥ analytic_ns`` and
   ``refresh_on_ns ≥ refresh_off_ns`` on every row (desynchronization,
-  activation windows and refresh can only add stalls)."""
+  activation windows and refresh can only add stalls).
+* ``sched/…`` — the bank-level scheduler: a mixed two-tenant workload
+  drained through ``machine.submit()`` packs heterogeneous requests across
+  banks, so the aggregate rate must beat the serialized single-stream
+  replay of the same requests (``sched_mixed_gops ≥ sched_serial_gops``),
+  with per-tenant queue/service latency attribution summing exactly to
+  the machine totals; and a refresh-policy A/B under refresh-heavy timing
+  where pausing between sequences beats eager issue with mid-sequence
+  abort + restart (``sched_stall_ns ≥ sched_aware_ns``)."""
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -273,6 +282,86 @@ def cache_and_replay(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Bank-level scheduler: mixed-tenant submit/drain + refresh-policy A/B
+# ---------------------------------------------------------------------------
+
+def scheduler_rows(smoke: bool = False) -> None:
+    from repro.core.trace import compile_trace
+    from repro.ops import BankScheduler, SimdramMachine
+    from repro.simdram.timing import TraceReplayTiming
+
+    n = 512 if smoke else 4096
+    n_banks = 8
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+
+    # two heterogeneous tenant streams drained through one controller:
+    # independent requests pack across banks, so the shared makespan
+    # tracks the longest stream instead of the serialized sum
+    jobs = [("svcA", "addition"), ("svcB", "multiplication"),
+            ("svcA", "maximum"), ("svcB", "relu"),
+            ("svcA", "subtraction"), ("svcB", "greater")]
+    mach = SimdramMachine(mode="replay")
+    futs = [mach.submit(op, *((x,) if op == "relu" else (x, b)),
+                        tenant=tenant)
+            for (tenant, op), x in zip(jobs, [a] * len(jobs))]
+    res = mach.drain(n_banks=n_banks)
+    if not all(f.done() and f.timing is not None for f in futs):
+        raise AssertionError("drain left unresolved futures")
+    # baseline: the same requests replayed back-to-back as one stream
+    rt = TraceReplayTiming(mach.timing)
+    serial_ns = sum(rt.replay(compile_trace(op, 8)[1]).ns
+                    for _, op in jobs)
+    ops_total = sum(r.lanes for r in res.requests)
+    mixed_gops = ops_total / res.ns
+    serial_gops = ops_total / serial_ns
+    # per-tenant attribution must reproduce the machine totals exactly —
+    # a drifting meter means requests are cross-charging tenants
+    ten_total = sum(st.total_ns for st in mach.stats.tenants.values())
+    if abs(ten_total - mach.stats.total_ns) > 1e-6 * mach.stats.total_ns:
+        raise AssertionError(
+            f"tenant PerfStats drifted from machine totals: "
+            f"{ten_total} vs {mach.stats.total_ns}")
+    ten = res.per_tenant()
+    for name, t in sorted(ten.items()):
+        row(f"sched/tenant/{name}/{n_banks}bank/n{n}", 0,
+            f"n_requests={t['n_requests']} "
+            f"mean_queue_ns={t['queue_ns'] / t['n_requests']:.1f} "
+            f"mean_service_ns={t['service_ns'] / t['n_requests']:.1f} "
+            f"finish_ns={t['finish_ns']:.1f}")
+    row(f"sched/mixed/{n_banks}bank/n{n}", 0,
+        f"sched_mixed_gops={mixed_gops:.4f} "
+        f"sched_serial_gops={serial_gops:.4f} "
+        f"makespan_ns={res.ns:.1f} serial_ns={serial_ns:.1f} "
+        f"n_requests={res.n_requests} tenants={len(ten)} "
+        f"tfaw_stall_ns={res.tfaw_stall_ns:.1f} "
+        f"refresh_stall_ns={res.refresh_stall_ns:.1f}")
+
+    # refresh-policy A/B under refresh-heavy timing: eager issue keeps
+    # losing in-flight sequences to mid-sequence refresh (abort+restart,
+    # wasted ACT slots); pausing between sequences avoids every restart
+    t_heavy = dataclasses.replace(DRAMTiming(), tREFI_ns=100.0,
+                                  tRFC_ns=30.0)
+
+    def run_policy(pol: str):
+        sched = BankScheduler(timing=t_heavy, n_banks=16,
+                              refresh_policy=pol)
+        mix = ("addition", "multiplication", "relu", "maximum") * 2
+        for i, op in enumerate(mix):
+            sched.enqueue(compile_trace(op, 8)[1], banks=2,
+                          tenant=f"t{i % 2}", name=op)
+        return sched.run()
+
+    aware, stall_res = run_policy("aware"), run_policy("stall")
+    row("sched/refresh_ab/16bank/8req", 0,
+        f"sched_aware_ns={aware.ns:.1f} sched_stall_ns={stall_res.ns:.1f} "
+        f"aware_pause_ns={aware.refresh_stall_ns:.1f} "
+        f"stall_restarts={stall_res.n_restarts} "
+        f"stall_wasted_acts={stall_res.n_acts - aware.n_acts}")
+
+
+# ---------------------------------------------------------------------------
 # Live Fig. 9/10-style rows: speedup/efficiency from the executed pipeline
 # ---------------------------------------------------------------------------
 
@@ -327,6 +416,7 @@ def live(smoke: bool = False) -> None:
 def main(smoke: bool = False) -> None:
     measured(smoke=smoke)
     cache_and_replay(smoke=smoke)
+    scheduler_rows(smoke=smoke)
     live(smoke=smoke)
     if smoke:
         return

@@ -59,7 +59,12 @@ def bad_gate_rows(text: str) -> list[str]:
       ``refresh_on_ns >= refresh_off_ns`` (refresh windows only stall), and
       ``refresh_phased_ns >= refresh_anchored_ns`` (threading the cross-op
       refresh phase through a chain can only add stall over per-op
-      anchoring).  Both members of every present pair must be finite and
+      anchoring), ``sched_mixed_gops >= sched_serial_gops`` (bank-level
+      packing of independent requests can only raise aggregate throughput
+      over the serialized single stream), and ``sched_stall_ns >=
+      sched_aware_ns`` (under refresh-heavy timing, eager issue pays for
+      aborted mid-sequence refreshes; pausing between sequences cannot be
+      slower).  Both members of every present pair must be finite and
       non-zero.
     """
     # (slower_key, faster_key, why) — slower >= faster, both finite > 0
@@ -70,6 +75,10 @@ def bad_gate_rows(text: str) -> list[str]:
         ("refresh_on_ns", "refresh_off_ns", "refresh can only add stalls"),
         ("refresh_phased_ns", "refresh_anchored_ns",
          "threading the refresh phase across ops can only add stalls"),
+        ("sched_mixed_gops", "sched_serial_gops",
+         "bank-level packing can only raise aggregate throughput"),
+        ("sched_stall_ns", "sched_aware_ns",
+         "refresh-aware pausing avoids aborted sequences"),
     )
     bad = []
     for line in text.splitlines():

@@ -13,12 +13,19 @@ FSM and the analytic command sum can each only add stall cycles over the
 next) and ``refresh_on_ns >= refresh_off_ns`` — fails the run with a
 non-zero exit, so the nightly job catches perf-model regressions instead
 of printing garbage.
+
+``--artifact PATH`` writes the parsed results (every ``name,us,derived``
+row with its key=value pairs decoded, per-bench pass/fail, and the gate
+diagnostics) as one JSON document — the persisted benchmark artifact the
+nightly job uploads, so runs are diffable without re-parsing CSV text.
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
 import io
+import json
+import re
 import sys
 import traceback
 
@@ -26,7 +33,7 @@ from . import (bench_apps, bench_area, bench_data_movement,
                bench_dualitycache, bench_energy, bench_reliability,
                bench_roofline, bench_table5_counts, bench_throughput,
                bench_transposition)
-from .common import bad_gate_rows, bad_perf_values
+from .common import _KV, bad_gate_rows, bad_perf_values
 
 BENCHES = {
     "table5": bench_table5_counts.main,      # Table 5  command counts
@@ -45,6 +52,30 @@ BENCHES = {
 # fast subset run nightly by CI before the full suite; each main() that
 # accepts ``smoke=True`` shrinks its problem sizes
 SMOKE = ("table5", "fig9", "fig14")
+
+_ROW = re.compile(r"^([A-Za-z0-9_/.\-]+),(-?[\d.]+),(.*)$")
+
+
+def parse_rows(text: str) -> list[dict]:
+    """Decode the ``name,us_per_call,derived`` CSV rows a bench printed
+    into JSON-ready dicts (derived key=value pairs parsed to floats where
+    they are numeric; trailing ``x`` ratio suffixes are kept as strings)."""
+    rows = []
+    for line in text.splitlines():
+        m = _ROW.match(line.strip())
+        if not m:
+            continue
+        name, us, derived = m.groups()
+        kv: dict[str, object] = {}
+        for key, val in _KV.findall(derived):
+            try:
+                kv[key] = float(val)
+            except ValueError:
+                kv[key] = val
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": kv})
+    return rows
+
 
 class _Tee(io.TextIOBase):
     def __init__(self, *streams):
@@ -66,14 +97,20 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset with reduced problem sizes; gates "
                          "on finite, non-zero modeled-throughput rows")
+    ap.add_argument("--artifact", default=None, metavar="PATH",
+                    help="write parsed results (rows, gate diagnostics, "
+                         "per-bench status) to PATH as JSON")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only
              else list(SMOKE) if args.smoke else list(BENCHES))
+    capture = args.smoke or args.artifact is not None
     failed = []
+    benches: dict[str, dict] = {}
     for name in names:
         print(f"\n==== {name} ====", flush=True)
         captured = io.StringIO()
-        sink = _Tee(sys.stdout, captured) if args.smoke else sys.stdout
+        sink = _Tee(sys.stdout, captured) if capture else sys.stdout
+        record = benches[name] = {"ok": True, "rows": [], "gate_errors": []}
         try:
             import inspect
             fn = BENCHES[name]
@@ -84,8 +121,11 @@ def main() -> None:
                     fn()
         except Exception:    # noqa: BLE001 — report and continue
             traceback.print_exc()
+            record["ok"] = False
             failed.append(name)
             continue
+        finally:
+            record["rows"] = parse_rows(captured.getvalue())
         if args.smoke:
             text = captured.getvalue()
             bad = bad_perf_values(text) + bad_gate_rows(text)
@@ -94,7 +134,16 @@ def main() -> None:
                       f"replay rows:", file=sys.stderr)
                 for b in bad:
                     print(f"  {b}", file=sys.stderr)
+                record["ok"] = False
+                record["gate_errors"] = bad
                 failed.append(name)
+    if args.artifact:
+        payload = {"argv": sys.argv[1:], "smoke": args.smoke,
+                   "failed": failed, "benches": benches}
+        with open(args.artifact, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"\nwrote benchmark artifact: {args.artifact}")
     if failed:
         print(f"\nFAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

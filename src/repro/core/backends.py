@@ -247,6 +247,12 @@ class PerfStats:
     elem_ops: int = 0
     max_banks: int = 1
     per_op: dict = dataclasses.field(default_factory=dict)
+    # tenant name → child PerfStats: per-tenant attribution for scheduled
+    # (submit/drain) execution.  Children share this accumulator's owner,
+    # and are *additionally* registered only while their tenant's
+    # submissions execute, so concurrent tenants never cross-charge and
+    # the tenant rollup sums to this accumulator's totals.
+    tenants: dict = dataclasses.field(default_factory=dict)
     # id(planes) → planes for the most recent op outputs of this scope
     # (strong refs so ids cannot be recycled, FIFO-bounded by
     # _RESIDENT_CAP); consumed ids trigger movement charges
@@ -346,27 +352,36 @@ class PerfStats:
         while len(self._resident) > _RESIDENT_CAP:
             del self._resident[next(iter(self._resident))]
 
-    def note_bank_skew(self, banks: int, n_rows: int, planes) -> None:
+    def note_bank_skew(self, banks: int, n_rows: int, planes,
+                       machine=None) -> None:
         """Record the per-bank data-arrival skew of an inter-bank scatter,
         keyed to the scattered plane array: the redistributed rows ride the
         shared internal bus serially, so bank *k*'s plane stack is complete
         ``k × rows_per_bank × t_PSM`` after bank 0's.  The replayed program
         that *consumes those planes* takes the skew as its per-bank issue
         offsets (a one-shot: once the banks have executed an op they are
-        back in step up to the FSM's own desynchronization)."""
+        back in step up to the FSM's own desynchronization).  The skew is
+        scoped to the machine session it was recorded under (``machine``):
+        a different machine replaying the same planes must not consume
+        another session's offsets."""
         if self.mode != "replay" or banks <= 1 or planes is None:
             return      # analytic accumulators never read offsets
         per_bank_ns = self.model.movement.inter_bank_ns(n_rows) / banks
         skew = tuple(k * per_bank_ns for k in range(banks))
-        self._bank_skew[id(planes)] = (skew, planes)
+        self._bank_skew[id(planes)] = (skew, planes, machine)
         while len(self._bank_skew) > _RESIDENT_CAP:
             del self._bank_skew[next(iter(self._bank_skew))]
 
-    def take_bank_skew(self, planes_id: int, banks: int):
+    def take_bank_skew(self, planes_id: int, banks: int, machine=None):
         """Consume the skew recorded for a scattered plane array (if its
-        bank count matches the consuming op's)."""
-        hit = self._bank_skew.pop(planes_id, None)
-        return hit[0] if hit is not None and len(hit[0]) == banks else None
+        bank count matches the consuming op's).  A pending skew recorded
+        under a *different* machine's session is left pending — the
+        rightful machine's next replayed op still consumes it."""
+        hit = self._bank_skew.get(planes_id)
+        if hit is None or hit[2] is not machine:
+            return None
+        del self._bank_skew[planes_id]
+        return hit[0] if len(hit[0]) == banks else None
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -414,45 +429,108 @@ class PerfStats:
             if f.name not in ("model", "mode", "refresh_phase", "owner"):
                 setattr(self, f.name, getattr(fresh, f.name))
 
+    def snapshot(self) -> dict:
+        """Structured, machine-readable view of every meter — per-kind
+        movement and transposition breakdowns, replay stall attribution,
+        and the per-tenant rollup.  :meth:`report` renders from this;
+        benchmarks and serving layers should consume the snapshot instead
+        of parsing report text.  Values are plain floats/ints/dicts
+        (recursively so for ``tenants``), safe to serialize as JSON."""
+        snap = {
+            "mode": self.mode,
+            "refresh_phase": self.refresh_phase,
+            "totals": {
+                "ns": self.total_ns, "nj": self.total_nj,
+                "gops": self.gops(), "gops_per_bank": self.gops_per_bank(),
+                "elem_ops": self.elem_ops, "max_banks": self.max_banks,
+                "replay_total_ns": self.replay_total_ns,
+            },
+            "execute": {
+                "ns": self.exec_ns, "nj": self.exec_nj,
+                "n_programs": self.n_programs,
+                "n_commands": self.n_commands,
+            },
+            "replay": {
+                "ns": self.replay_ns, "nj": self.replay_nj,
+                "stall_ns": self.replay_stall_ns,
+                "tfaw_stall_ns": self.replay_tfaw_ns,
+                "refresh_stall_ns": self.replay_refresh_ns,
+                "bank_spread_ns": self.replay_bank_spread_ns,
+            },
+            "movement": {
+                "ns": self.movement_ns, "n": self.n_moves,
+                "per_kind": {
+                    "intra": {"ns": self.movement_intra_ns,
+                              "n": self.n_moves_intra},
+                    "inter": {"ns": self.movement_inter_ns,
+                              "n": self.n_moves_inter},
+                },
+            },
+            "transposition": {
+                "ns": self.transpose_ns, "n": self.n_transposes,
+                "per_kind": {
+                    "to": {"ns": self.transpose_to_ns,
+                           "n": self.n_transposes_to},
+                    "from": {"ns": self.transpose_from_ns,
+                             "n": self.n_transposes_from},
+                },
+            },
+            "per_op": {op: dict(d) for op, d in self.per_op.items()},
+            "tenants": {name: st.snapshot()
+                        for name, st in self.tenants.items()},
+        }
+        return snap
+
     def report(self) -> str:
+        snap = self.snapshot()
+        tot, ex = snap["totals"], snap["execute"]
+        mv, tr = snap["movement"], snap["transposition"]
         lines = [
-            f"modeled DRAM cost: {self.total_ns:.1f} ns / "
-            f"{self.total_nj:.1f} nJ  ({self.n_programs} μPrograms, "
-            f"{self.n_commands} command sequences, banks={self.max_banks})",
-            f"  execute    {self.exec_ns:12.1f} ns  {self.exec_nj:10.1f} nJ",
+            f"modeled DRAM cost: {tot['ns']:.1f} ns / "
+            f"{tot['nj']:.1f} nJ  ({ex['n_programs']} μPrograms, "
+            f"{ex['n_commands']} command sequences, "
+            f"banks={tot['max_banks']})",
+            f"  execute    {ex['ns']:12.1f} ns  {ex['nj']:10.1f} nJ",
         ]
-        if self.mode == "replay":
+        if snap["mode"] == "replay":
+            rp = snap["replay"]
             lines += [
-                f"  replayed   {self.replay_ns:12.1f} ns  "
-                f"{self.replay_nj:10.1f} nJ  "
-                f"(+{self.replay_stall_ns:.1f} ns stall vs analytic)",
-                f"    tFAW stalls     {self.replay_tfaw_ns:9.1f} ns   "
-                f"refresh stalls {self.replay_refresh_ns:9.1f} ns "
-                f"({'phase-threaded' if self.refresh_phase else 'per-op anchored'})",
-                f"    bank finish spread {self.replay_bank_spread_ns:6.1f} ns"
+                f"  replayed   {rp['ns']:12.1f} ns  "
+                f"{rp['nj']:10.1f} nJ  "
+                f"(+{rp['stall_ns']:.1f} ns stall vs analytic)",
+                f"    tFAW stalls     {rp['tfaw_stall_ns']:9.1f} ns   "
+                f"refresh stalls {rp['refresh_stall_ns']:9.1f} ns "
+                f"({'phase-threaded' if snap['refresh_phase'] else 'per-op anchored'})",
+                f"    bank finish spread {rp['bank_spread_ns']:6.1f} ns"
                 f"  (Σ per-op slowest − fastest bank)",
             ]
         lines += [
-            f"  movement   {self.movement_ns:12.1f} ns  "
-            f"({self.n_moves} relocations)",
-            f"    intra-bank LISA {self.movement_intra_ns:9.1f} ns  "
-            f"({self.n_moves_intra} hops)",
-            f"    inter-bank PSM  {self.movement_inter_ns:9.1f} ns  "
-            f"({self.n_moves_inter} transfers)",
-            f"  transpose  {self.transpose_ns:12.1f} ns  "
-            f"({self.n_transposes} passes)",
-            f"    to_bitplanes    {self.transpose_to_ns:9.1f} ns  "
-            f"({self.n_transposes_to} passes)",
-            f"    from_bitplanes  {self.transpose_from_ns:9.1f} ns  "
-            f"({self.n_transposes_from} passes)",
-            f"  effective  {self.gops():.4f} GOps/s "
-            f"({self.gops_per_bank():.4f} per bank)",
+            f"  movement   {mv['ns']:12.1f} ns  "
+            f"({mv['n']} relocations)",
+            f"    intra-bank LISA {mv['per_kind']['intra']['ns']:9.1f} ns  "
+            f"({mv['per_kind']['intra']['n']} hops)",
+            f"    inter-bank PSM  {mv['per_kind']['inter']['ns']:9.1f} ns  "
+            f"({mv['per_kind']['inter']['n']} transfers)",
+            f"  transpose  {tr['ns']:12.1f} ns  "
+            f"({tr['n']} passes)",
+            f"    to_bitplanes    {tr['per_kind']['to']['ns']:9.1f} ns  "
+            f"({tr['per_kind']['to']['n']} passes)",
+            f"    from_bitplanes  {tr['per_kind']['from']['ns']:9.1f} ns  "
+            f"({tr['per_kind']['from']['n']} passes)",
+            f"  effective  {tot['gops']:.4f} GOps/s "
+            f"({tot['gops_per_bank']:.4f} per bank)",
         ]
-        for op, d in sorted(self.per_op.items()):
+        for op, d in sorted(snap["per_op"].items()):
             extra = (f" {d['replay_ns']:10.1f} ns replayed"
-                     if self.mode == "replay" else "")
+                     if snap["mode"] == "replay" else "")
             lines.append(f"    {op:<24} ×{d['calls']:<4} {d['ns']:10.1f} ns "
                          f"{d['nj']:10.1f} nJ{extra}")
+        for name, t in sorted(snap["tenants"].items()):
+            lines.append(
+                f"  tenant {name:<17} {t['totals']['ns']:10.1f} ns  "
+                f"{t['totals']['nj']:10.1f} nJ  "
+                f"({t['execute']['n_programs']} μPrograms, "
+                f"{t['totals']['gops']:.4f} GOps/s)")
         return "\n".join(lines)
 
 
@@ -546,11 +624,13 @@ def _transpose_hook(kind: str, n_bits: int, lanes: int) -> None:
 def _movement_hook(kind: str, n_rows: int, banks: int | None = None,
                    planes=None) -> None:
     inter = kind == "inter"
-    for st in _charging_stats():
+    eff = _current_machine()
+    for st in _charging_stats(eff):
         st.charge_movement(n_rows, inter_bank=inter)
         if inter and banks:
-            # scatter: the serialized bus transfer desynchronizes the banks
-            st.note_bank_skew(banks, n_rows, planes)
+            # scatter: the serialized bus transfer desynchronizes the
+            # banks; the skew is keyed to the session that scattered them
+            st.note_bank_skew(banks, n_rows, planes, machine=eff)
 
 
 register_transpose_hook(_transpose_hook)
@@ -590,7 +670,8 @@ def execute_lowered(prog: UProgram, trace: LoweredTrace, operands: dict,
     if banked and any(v.ndim != 3 for v in operands.values()):
         raise ValueError("banked execution needs every operand banked")
     banks = first.shape[0] if banked else 1
-    charging = _charging_stats(machine)
+    eff = machine if machine is not None else _current_machine()
+    charging = _charging_stats(eff)
     for st in charging:
         offsets = None
         for planes in operands.values():
@@ -603,7 +684,7 @@ def execute_lowered(prog: UProgram, trace: LoweredTrace, operands: dict,
                 # op's output and a consumer's operand; rebank creates a
                 # new array).
                 st.charge_movement(int(planes.shape[-2]))
-            skew = st.take_bank_skew(id(planes), banks)
+            skew = st.take_bank_skew(id(planes), banks, machine=eff)
             if skew is not None:
                 # this op consumes freshly scattered planes: its per-bank
                 # streams cannot start before each bank's data arrived
@@ -627,6 +708,56 @@ def execute_lowered(prog: UProgram, trace: LoweredTrace, operands: dict,
         for arr in outs.values():
             st.note_output(arr)
     return outs
+
+
+def execute_heterogeneous(items, machine=None) -> list:
+    """Execute a heterogeneous batch of lowered programs — the execution
+    half of bank-level scheduling (:class:`~repro.simdram.scheduler
+    .BankScheduler` models the timing half).
+
+    ``items`` is a sequence of ``(prog, trace, operands, out_bits,
+    backend)`` tuples with plane-level operands (``name →
+    uint32[n_bits, W]``, unbanked).  Returns one output dict per item, in
+    order.  Adjacent items that share the same trace, backend, out_bits
+    and operand layout are *stacked along the bank axis* and dispatched as
+    one banked :func:`execute_lowered` call — a tenant's stream of
+    identical requests collapses into a handful of vmapped executions
+    instead of one dispatch per request, exactly the bank-parallel
+    placement the scheduler models.  The modeled charge is the banked
+    charge (latency once, energy × the stacked width); per-request timing
+    comes from the scheduler, not from here.
+    """
+    items = list(items)
+    results: list = [None] * len(items)
+
+    def _sig(item):
+        prog, trace, ops, ob, be = item
+        if any(v.ndim != 2 for v in ops.values()):
+            return None              # banked operands: dispatch solo
+        shapes = tuple((k, tuple(ops[k].shape), str(ops[k].dtype))
+                       for k in sorted(ops))
+        frozen_ob = None if ob is None else tuple(sorted(ob.items()))
+        return (id(trace), be, frozen_ob, shapes)
+
+    i = 0
+    while i < len(items):
+        prog, trace, ops, ob, be = items[i]
+        sig = _sig(items[i])
+        j = i + 1
+        while sig is not None and j < len(items) and _sig(items[j]) == sig:
+            j += 1
+        if j - i > 1:
+            stacked = {k: jnp.stack([items[x][2][k] for x in range(i, j)])
+                       for k in ops}
+            outs = execute_lowered(prog, trace, stacked, out_bits=ob,
+                                   backend=be, machine=machine)
+            for x in range(i, j):
+                results[x] = {k: v[x - i] for k, v in outs.items()}
+        else:
+            results[i] = execute_lowered(prog, trace, ops, out_bits=ob,
+                                         backend=be, machine=machine)
+        i = j
+    return results
 
 
 # ---------------------------------------------------------------------------

@@ -121,7 +121,7 @@ def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
                   max_seq: int | None = None, extra_batch: dict | None = None,
                   sampler: str = "host", sampler_backend: str | None = None,
                   sampler_perf: PerfStats | None = None,
-                  sampler_machine=None):
+                  machine=None, sampler_machine=None):
     """e2e greedy decoding loop (examples/tests; single host).
 
     ``sampler="simdram"`` offloads greedy token selection to the
@@ -129,17 +129,28 @@ def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
     is the plain ``jnp.argmax``.  ``sampler_perf`` accumulates the
     tournament's modeled DRAM cost across every decoded token —
     ``sampler_perf.total_ns / steps`` is the modeled sampling cost per
-    token.  ``sampler_machine`` binds sampling to a
+    token.  ``machine`` binds sampling to a
     :class:`~repro.simdram.machine.SimdramMachine` session (its backend,
     μProgram Memory and — absent ``sampler_perf`` — its own accumulator),
     so concurrent decode services with different DRAM configs stay
-    isolated.
+    isolated; it is the same kwarg every ``bbop_*``/``simdram_*`` entry
+    point takes.  ``sampler_machine`` is a deprecated alias for it.
     """
+    if sampler_machine is not None:
+        import warnings
+        warnings.warn("sampler_machine= is deprecated; pass machine= "
+                      "(the uniform kwarg across the SIMDRAM op surface)",
+                      DeprecationWarning, stacklevel=2)
+        if machine is None:
+            machine = sampler_machine
+        elif machine is not sampler_machine:
+            raise ValueError("conflicting machine= and sampler_machine= "
+                             "arguments — pass machine= only")
     if sampler == "simdram":
         def pick(logits):
             return simdram_greedy_token(logits, backend=sampler_backend,
                                         perf_stats=sampler_perf,
-                                        machine=sampler_machine)
+                                        machine=machine)
     elif sampler == "host":
         def pick(logits):
             return jnp.argmax(logits, -1)

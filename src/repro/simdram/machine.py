@@ -23,6 +23,15 @@ Two machines with different timings, banks, backends or cache capacities
 coexist in one process without sharing any of the above — the configuration
 is explicit and isolated instead of ambient process globals.
 
+A machine also serves *concurrent workloads*: :meth:`SimdramMachine.submit`
+queues an operation for a named tenant and returns a :class:`SimdramFuture`;
+:meth:`SimdramMachine.drain` packs every pending request across banks with
+a :class:`~repro.simdram.scheduler.BankScheduler` (FR-FCFS issue under the
+shared rank constraints, refresh-aware by default), executes them, and
+resolves each future with its result plus its modeled per-request timing.
+Per-tenant :class:`~repro.core.backends.PerfStats` attribution rides the
+owner filter (:meth:`SimdramMachine.tenant_stats`).
+
 The three paper steps as API::
 
     m = SimdramMachine(timing=DRAMTiming(...), banks=4, backend="pallas")
@@ -53,18 +62,21 @@ resolves to the process default, so ``bbop_*`` / ``simdram_pipeline`` /
 from __future__ import annotations
 
 import contextlib
+import itertools
 import threading
 
 import jax.numpy as jnp
 
-from ..core.backends import PerfStats, execute_lowered
+from ..core.backends import (PerfStats, execute_heterogeneous,
+                             execute_lowered)
 from ..core.backends import timed as _timed_execution
 from ..core.compiler import SliceSpec, compile_slice
 from ..core.graph import LogicGraph
 from ..core.trace import GLOBAL_TRACE_CACHE, TraceCache
-from .layout import (BitplaneArray, register_movement_hook,
+from .layout import (LANE_WORD, BitplaneArray, register_movement_hook,
                      register_transpose_hook)
-from .timing import DRAMEnergy, DRAMTiming, SimdramPerfModel
+from .scheduler import BankScheduler, RequestTiming, ScheduleResult
+from .timing import DRAMEnergy, DRAMTiming, ReplayResult, SimdramPerfModel
 
 # innermost-last, per-thread stack of machines whose session scope is
 # open; bbop_* and the layout hooks consult it so work inside ``with
@@ -151,13 +163,16 @@ class BoundOp:
             # input transposition passes too
             compiled = self.program(n_bits, optimize)
             prog = compiled[0]
-            if len(operands) != len(prog.inputs):
+            # inputs may repeat a name (e.g. relu reads 'a' twice) — one
+            # operand binds each distinct input array
+            names = tuple(dict.fromkeys(prog.inputs))
+            if len(operands) != len(names):
                 raise TypeError(
-                    f"{self.name} takes {len(prog.inputs)} operands "
-                    f"{prog.inputs}, got {len(operands)}")
+                    f"{self.name} takes {len(names)} operands "
+                    f"{names}, got {len(operands)}")
             keep = any(isinstance(x, BitplaneArray) for x in operands)
             bound = {}
-            for arr_name, x in zip(prog.inputs, operands):
+            for arr_name, x in zip(names, operands):
                 if not isinstance(x, BitplaneArray):
                     x = BitplaneArray.from_values(jnp.asarray(x), n_bits)
                 bound[arr_name] = x
@@ -165,6 +180,84 @@ class BoundOp:
                            out_bits=out_bits, optimize=optimize,
                            backend=backend, keep_planes=keep,
                            machine=self.machine, compiled=compiled)
+
+
+class _Submission:
+    """One queued :meth:`SimdramMachine.submit` request awaiting drain."""
+
+    __slots__ = ("future", "name", "operands", "n_bits", "out_bits",
+                 "signed_out", "optimize", "backend", "tenant")
+
+    def __init__(self, future, name, operands, n_bits, out_bits,
+                 signed_out, optimize, backend, tenant) -> None:
+        self.future = future
+        self.name = name
+        self.operands = operands
+        self.n_bits = n_bits
+        self.out_bits = out_bits
+        self.signed_out = signed_out
+        self.optimize = optimize
+        self.backend = backend
+        self.tenant = tenant
+
+
+class SimdramFuture:
+    """Handle to one scheduled operation (what :meth:`SimdramMachine.submit`
+    returns).
+
+    The future resolves when the machine drains: :meth:`result` returns
+    the operation's value (running :meth:`SimdramMachine.drain` first if
+    needed), and the modeled timing surfaces alongside it — ``timing`` is
+    the scheduler's per-request :class:`~repro.simdram.scheduler
+    .RequestTiming` (arrival / first-activation / completion, queue vs
+    service split, stall attribution), ``replay`` re-expresses it as a
+    :class:`~repro.simdram.timing.ReplayResult`, and ``finish_ns`` is the
+    modeled completion time on the shared rank clock.  ``tenant`` names
+    the workload stream the request was attributed to (its share of the
+    machine's PerfStats lives in ``machine.tenant_stats(tenant)``).
+    """
+
+    def __init__(self, machine: "SimdramMachine", name: str, tenant: str,
+                 index: int) -> None:
+        self.machine = machine
+        self.name = name
+        self.tenant = tenant
+        self.index = index          # submission order on this machine
+        self._value = None
+        self._timing: RequestTiming | None = None
+        self._done = False
+
+    def __repr__(self) -> str:
+        state = "done" if self._done else "pending"
+        return (f"<SimdramFuture #{self.index} {self.name!r} "
+                f"tenant={self.tenant!r} {state}>")
+
+    def done(self) -> bool:
+        """True once the machine has drained this submission."""
+        return self._done
+
+    def result(self):
+        """The operation's result, draining the machine's queue first if
+        this submission is still pending (same default scheduling as a
+        bare :meth:`SimdramMachine.drain`)."""
+        if not self._done:
+            self.machine.drain()
+        return self._value
+
+    @property
+    def timing(self) -> RequestTiming | None:
+        """Scheduler timing for this request (None until drained)."""
+        return self._timing
+
+    @property
+    def replay(self) -> ReplayResult | None:
+        """This request's scheduled service time as a ReplayResult."""
+        return self._timing.replay_result() if self._timing else None
+
+    @property
+    def finish_ns(self) -> float | None:
+        """Modeled completion time on the drain's rank clock."""
+        return self._timing.finish_ns if self._timing else None
 
 
 class SimdramMachine:
@@ -222,6 +315,9 @@ class SimdramMachine:
                                      compile_fn=self._compile)
         self._transpose_hooks: list = []
         self._movement_hooks: list = []
+        self._pending: list[_Submission] = []
+        self._submit_lock = threading.Lock()
+        self._n_submitted = 0
 
     def __repr__(self) -> str:
         be = self.backend or "default"
@@ -385,6 +481,138 @@ class SimdramMachine:
             banks = self.banks
         return simdram_pipeline(banks=banks, backend=backend, machine=self,
                                 **kw)
+
+    # -- scheduled execution: submit / drain ---------------------------------
+    def tenant_stats(self, tenant: str = "default") -> PerfStats:
+        """The per-tenant :class:`PerfStats` accumulator (created on first
+        use, stored in ``self.stats.tenants``).  Tenant accumulators share
+        this machine as owner — interleaved *foreign* machine sessions
+        never cross-charge them — and are active only while their own
+        tenant's submissions prepare and execute, so concurrent tenants
+        never cross-charge each other either.  Summing any meter over
+        ``stats.tenants`` reproduces the machine total for work that went
+        through submit/drain."""
+        st = self.stats.tenants.get(tenant)
+        if st is None:
+            st = PerfStats(model=self.model, mode=self.stats.mode,
+                           refresh_phase=self.stats.refresh_phase,
+                           owner=self)
+            self.stats.tenants[tenant] = st
+        return st
+
+    def submit(self, op: str, *operands, n_bits: int = 8,
+               tenant: str = "default", out_bits: int | None = None,
+               signed_out: bool = False, optimize: bool = True,
+               backend: str | None = None) -> SimdramFuture:
+        """Queue one operation for scheduled execution; returns a
+        :class:`SimdramFuture`.
+
+        Submissions accumulate until :meth:`drain` runs them through a
+        :class:`~repro.simdram.scheduler.BankScheduler` — heterogeneous
+        requests packed across banks under the shared rank constraints —
+        and executes them on this machine's backend.  ``tenant`` names the
+        workload stream for scheduling fairness bookkeeping and PerfStats
+        attribution (:meth:`tenant_stats`); operands follow the same
+        rules as calling the bound op directly (horizontal arrays or
+        plane-resident :class:`BitplaneArray`\\ s)."""
+        if op not in self.ops():
+            raise KeyError(f"unknown operation {op!r}; this machine "
+                           f"knows {self.ops()}")
+        with self._submit_lock:
+            fut = SimdramFuture(self, op, tenant, self._n_submitted)
+            self._n_submitted += 1
+            self._pending.append(_Submission(
+                fut, op, operands, n_bits, out_bits, signed_out,
+                optimize, backend, tenant))
+        return fut
+
+    def drain(self, n_banks: int | None = None,
+              refresh_policy: str = "aware", policy: str = "frfcfs",
+              scheduler: BankScheduler | None = None) -> ScheduleResult:
+        """Run every pending submission: model the schedule (per-bank
+        queues, FR-FCFS issue, the chosen refresh policy) and execute the
+        corresponding μPrograms, resolving each submission's future with
+        its result and its :class:`RequestTiming`.
+
+        ``n_banks`` sizes the modeled controller (default: the machine's
+        bank count, or the timing's ``banks_per_chip`` for a single-bank
+        machine); pass an explicit ``scheduler`` to control placement /
+        policies fully.  Returns the :class:`ScheduleResult` (makespan,
+        per-request and per-tenant breakdowns).  Execution charges land on
+        the machine accumulator *and* on each submission's tenant
+        accumulator (:meth:`tenant_stats`)."""
+        with self._submit_lock:
+            subs = self._pending
+            self._pending = []
+        if scheduler is None:
+            if n_banks is None:
+                n_banks = self.banks if self.banks > 1 \
+                    else self.timing.banks_per_chip
+            scheduler = BankScheduler(timing=self.timing, n_banks=n_banks,
+                                      policy=policy,
+                                      refresh_policy=refresh_policy)
+        if not subs:
+            return scheduler.run()
+        prepared = []
+        with self.session(), _timed_execution(stats=self.stats):
+            for sub in subs:
+                # prepare inside the tenant's scope so operand
+                # transposition charges land on the right tenant
+                with _timed_execution(stats=self.tenant_stats(sub.tenant)):
+                    prog, trace = self.memory.get(sub.name, sub.n_bits,
+                                                  sub.optimize)
+                    names = tuple(dict.fromkeys(prog.inputs))
+                    if len(sub.operands) != len(names):
+                        raise TypeError(
+                            f"{sub.name} takes {len(names)} operands "
+                            f"{names}, got {len(sub.operands)}")
+                    keep = any(isinstance(x, BitplaneArray)
+                               for x in sub.operands)
+                    bound = {}
+                    for arr_name, x in zip(names, sub.operands):
+                        if not isinstance(x, BitplaneArray):
+                            x = BitplaneArray.from_values(jnp.asarray(x),
+                                                          sub.n_bits)
+                        bound[arr_name] = x
+                if len({(o.banked, o.n_banks, o.length, o.words)
+                        for o in bound.values()}) > 1:
+                    raise ValueError(
+                        f"{sub.name}: operand bank/length shapes disagree: "
+                        f"{[o.planes.shape for o in bound.values()]}")
+                first = next(iter(bound.values()))
+                width = first.n_banks if first.banked else 1
+                rid = scheduler.enqueue(
+                    trace, banks=width, tenant=sub.tenant,
+                    name=f"{sub.name}/{sub.n_bits}b",
+                    lanes=first.words * LANE_WORD * width)
+                prepared.append((sub, prog, trace, bound, keep, rid))
+            # execute per tenant (attribution scope); inside a tenant,
+            # adjacent same-trace requests collapse into banked batches
+            for tenant, group in itertools.groupby(
+                    prepared, key=lambda p: p[0].tenant):
+                group = list(group)
+                items = []
+                for sub, prog, trace, bound, keep, rid in group:
+                    ob = {prog.outputs[0]: sub.out_bits} \
+                        if sub.out_bits else None
+                    items.append((prog, trace,
+                                  {k: v.planes for k, v in bound.items()},
+                                  ob, sub.backend or self.backend))
+                with _timed_execution(stats=self.tenant_stats(tenant)):
+                    outs_list = execute_heterogeneous(items, machine=self)
+                    for (sub, prog, trace, bound, keep, rid), outs in zip(
+                            group, outs_list):
+                        first = next(iter(bound.values()))
+                        res = BitplaneArray(outs[prog.outputs[0]],
+                                            sub.out_bits or sub.n_bits,
+                                            first.length, sub.signed_out)
+                        sub.future._value = res if keep else res.to_values()
+        sched_res = scheduler.run()
+        by_rid = {rt.index: rt for rt in sched_res.requests}
+        for sub, prog, trace, bound, keep, rid in prepared:
+            sub.future._timing = by_rid.get(rid)
+            sub.future._done = True
+        return sched_res
 
     # -- scoped instrumentation ----------------------------------------------
     def register_transpose_hook(self, hook) -> None:

@@ -208,8 +208,12 @@ class _RankState:
         self.refresh_stall = 0
         self.n_refresh_stalls = 0
 
-    def constrain(self, t: int) -> int:
-        """Earliest cycle ≥ ``t`` at which one more ACT may issue."""
+    def constrain_act(self, t: int) -> int:
+        """Earliest cycle ≥ ``t`` satisfying the rank's ACT-slot windows —
+        the tRRD ACT→ACT gap and the sliding four-activate tFAW window.
+        Refresh is *not* consulted (see :meth:`constrain_refresh`); the
+        split lets queue-aware schedulers interleave their own refresh
+        policy between the two checks."""
         if self.c_rrd and self.last_act is not None:
             t = max(t, self.last_act + self.c_rrd)
         if self.c_faw and len(self.acts) == 4:
@@ -217,25 +221,83 @@ class _RankState:
             if gate > t:
                 self.tfaw_stall += gate - t
                 t = gate
-        if self.c_refi:
-            # rank time = local replay time + phase since the last epoch.
-            # k >= 1 models the freshly-refreshed bank of a standalone
-            # replay (no window at its own t=0); with a threaded phase the
-            # epoch-0 window is real — an op whose clock lands just past a
-            # tREFI boundary starts *inside* that window and must stall
-            # out of it (phase > 0 lifts the guard for k == 0).
-            ta = t + self.phase
-            k = ta // self.c_refi
-            if (k >= 1 or self.phase) and ta < k * self.c_refi + self.c_rfc:
-                end = k * self.c_refi + self.c_rfc - self.phase
-                self.refresh_stall += end - t
-                self.n_refresh_stalls += 1
-                t = end
         return t
 
+    def refresh_window(self, t: int) -> tuple[int, int] | None:
+        """The ``(start, end)`` local-cycle bounds of the refresh window
+        covering ``t``, or None when ``t`` is outside every active window.
+
+        Rank time = local replay time + phase since the last epoch.
+        ``k >= 1`` models the freshly-refreshed bank of a standalone
+        replay (no window at its own t=0); with a threaded phase the
+        epoch-0 window is real — an op whose clock lands just past a
+        tREFI boundary starts *inside* that window and must stall out of
+        it (phase > 0 lifts the guard for k == 0)."""
+        if not self.c_refi:
+            return None
+        ta = t + self.phase
+        k = ta // self.c_refi
+        if (k >= 1 or self.phase) and ta < k * self.c_refi + self.c_rfc:
+            return (k * self.c_refi - self.phase,
+                    k * self.c_refi + self.c_rfc - self.phase)
+        return None
+
+    def next_refresh_start(self, t: int) -> int | None:
+        """Local start cycle of the first *active* refresh window whose
+        start is ≥ ``t`` (None when refresh is disabled).  The epoch-0
+        window only exists under a threaded phase, matching
+        :meth:`refresh_window`'s guard."""
+        if not self.c_refi:
+            return None
+        k_min = 0 if self.phase else 1
+        k = max(k_min, -(-(t + self.phase) // self.c_refi))
+        return k * self.c_refi - self.phase
+
+    def clear_of_refresh(self, t: int, span: int) -> int:
+        """Earliest cycle ≥ ``t`` at which a busy period of ``span`` cycles
+        fits entirely between refresh windows — the refresh-*aware*
+        scheduler's pause-point: rather than letting a window interrupt an
+        in-flight command sequence, issue is held until the whole sequence
+        can run to completion.  A span too long to ever fit between two
+        windows is returned unchanged; the caller falls back to
+        mid-sequence refresh semantics."""
+        if not self.c_refi or span >= self.c_refi - self.c_rfc:
+            return t
+        while True:
+            win = self.refresh_window(t)
+            if win is not None:
+                t = win[1]
+                continue
+            nxt = self.next_refresh_start(t)
+            if nxt is not None and nxt < t + span:
+                t = nxt + self.c_rfc
+                continue
+            return t
+
+    def constrain_refresh(self, t: int) -> int:
+        """Earliest cycle ≥ ``t`` outside any refresh window (ACTs may not
+        issue while the rank refreshes); deferral is metered as refresh
+        stall."""
+        win = self.refresh_window(t)
+        if win is not None:
+            self.refresh_stall += win[1] - t
+            self.n_refresh_stalls += 1
+            t = win[1]
+        return t
+
+    def constrain(self, t: int) -> int:
+        """Earliest cycle ≥ ``t`` at which one more ACT may issue (ACT-slot
+        windows first, then refresh)."""
+        return self.constrain_refresh(self.constrain_act(t))
+
     def record(self, t: int) -> None:
-        self.last_act = t
+        # tolerate slightly out-of-order records (a scheduler issuing a
+        # prioritized in-flight ACT with tRRD disabled): the window
+        # bookkeeping needs last_act/acts[0] to be the true max/min
+        self.last_act = t if self.last_act is None else max(self.last_act, t)
         self.acts.append(t)
+        if len(self.acts) > 1 and self.acts[-2] > t:
+            self.acts.sort()
         if len(self.acts) > 4:
             del self.acts[0]
 

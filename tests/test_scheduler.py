@@ -1,0 +1,466 @@
+"""Multi-tenant bank scheduler: per-bank queues, FR-FCFS issue, refresh
+policies, and the ``machine.submit()`` futures surface.
+
+Covers the tentpole acceptance criteria and the satellites that rode along:
+
+* **property** — a single tenant enqueueing one identical trace on every
+  bank under the ``"defer"`` refresh policy is cycle-for-cycle the PR-4
+  desynchronized replay, on every Table-5 op, across bank counts, with and
+  without refresh pressure and issue offsets;
+* **bank-level parallelism** — heterogeneous requests pack across banks,
+  so the mixed makespan beats the serialized sum of solo replays;
+* **refresh-aware vs stall** — under refresh-heavy timing, pausing between
+  sequences beats eager issue with mid-sequence abort + restart;
+* **submit/drain** — futures resolve with correct values (vs the direct
+  bbop oracle), scheduler timing attaches to each future, and per-tenant
+  :class:`PerfStats` accumulators sum exactly to the machine totals;
+* **satellites** — ``PerfStats.snapshot()`` is structured and JSON-safe,
+  ``note_bank_skew`` offsets are scoped per machine session,
+  ``execute_heterogeneous`` matches solo dispatch, and ``greedy_decode``
+  accepts the uniform ``machine=`` kwarg (``sampler_machine=`` warns).
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import execute_lowered
+from repro.core.circuits import ALL_OPS
+from repro.core.trace import compile_trace
+from repro.ops import (BankScheduler, BitplaneArray, SimdramMachine,
+                       bbop_add, execute_heterogeneous, timed)
+from repro.simdram.timing import DRAMTiming, TraceReplayTiming
+
+TCK = 0.833
+RNG = np.random.default_rng(0x5C0)
+
+
+def _timing(**kw) -> DRAMTiming:
+    return dataclasses.replace(DRAMTiming(), **kw)
+
+
+def _assert_matches_replay(sched: BankScheduler, trace, banks: int,
+                           rt: TraceReplayTiming, offsets=None, ctx=()):
+    rid = sched.enqueue(trace, banks=banks, offsets_ns=offsets)
+    got = sched.run()
+    want = rt.replay(trace, banks=banks, offsets_ns=offsets)
+    label = (*ctx, banks)
+    assert got.ns == pytest.approx(want.ns), label
+    assert got.cycles == want.cycles, label
+    assert got.n_acts == want.n_acts, label
+    assert got.tfaw_stall_ns == pytest.approx(want.tfaw_stall_ns), label
+    assert got.refresh_stall_ns == pytest.approx(want.refresh_stall_ns), label
+    assert got.n_refresh_stalls == want.n_refresh_stalls, label
+    req = got.requests[rid]
+    assert req.n_seqs == want.n_seqs
+    assert req.n_acts == want.n_acts
+    return got, want
+
+
+# ---------------------------------------------------------------------------
+# Property: defer-policy schedule ≡ PR-4 desync replay
+# ---------------------------------------------------------------------------
+
+
+def test_defer_matches_replay_every_table5_op():
+    """Acceptance: one tenant, one trace replicated on all banks, under the
+    ``"defer"`` refresh policy — the scheduler event loop must reproduce
+    :meth:`TraceReplayTiming.replay` exactly (makespan, cycle count, ACT
+    count, tFAW and refresh stall attribution) on every Table-5 op."""
+    rt = TraceReplayTiming()
+    for op in ALL_OPS:
+        _, trace = compile_trace(op, 8)
+        sched = BankScheduler(n_banks=4, refresh_policy="defer")
+        _assert_matches_replay(sched, trace, 4, rt, ctx=(op,))
+
+
+@pytest.mark.parametrize("banks", [1, 4, 16])
+def test_defer_matches_replay_under_refresh_pressure(banks):
+    """The equivalence holds when tRRD/tFAW and toy refresh windows all
+    bind, across bank counts."""
+    t = _timing(tREFI_ns=150.0, tRFC_ns=50.0)
+    rt = TraceReplayTiming(t)
+    for op in ("addition", "xor_reduction", "relu"):
+        _, trace = compile_trace(op, 8)
+        sched = BankScheduler(timing=t, n_banks=banks,
+                              refresh_policy="defer")
+        _assert_matches_replay(sched, trace, banks, rt, ctx=(op,))
+
+
+def test_defer_matches_replay_with_issue_offsets():
+    rt = TraceReplayTiming()
+    _, trace = compile_trace("addition", 8)
+    offsets = (0.0, 500.0)
+    sched = BankScheduler(n_banks=2, refresh_policy="defer")
+    _assert_matches_replay(sched, trace, 2, rt, offsets=offsets)
+
+
+# ---------------------------------------------------------------------------
+# Bank-level parallelism: heterogeneous requests overlap
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_requests_overlap_across_banks():
+    """Two independent single-bank requests land on distinct banks and
+    overlap: the scheduled makespan beats the serialized sum of their solo
+    replays (by nearly the shorter request's length)."""
+    rt = TraceReplayTiming()
+    _, t_add = compile_trace("addition", 8)
+    _, t_mul = compile_trace("multiplication", 8)
+    solo_add = rt.replay(t_add).ns
+    solo_mul = rt.replay(t_mul).ns
+    sched = BankScheduler(n_banks=2)
+    r0 = sched.enqueue(t_add, name="add")
+    r1 = sched.enqueue(t_mul, name="mul")
+    res = sched.run()
+    assert res.requests[r0].bank_ids != res.requests[r1].bank_ids
+    # overlap is real: the makespan tracks the longer request, not the
+    # serialized sum (shared tRRD/tFAW add a small coupling cost)
+    assert res.ns < solo_add + solo_mul
+    assert res.ns <= 1.05 * max(solo_add, solo_mul)
+    # queues reset between runs (one-shot event loop)
+    assert sched.n_pending == 0
+    assert sched.run().n_requests == 0
+
+
+def test_least_loaded_assignment_and_explicit_bank_ids():
+    _, t_add = compile_trace("addition", 8)
+    sched = BankScheduler(n_banks=4)
+    a = sched.enqueue(t_add)                  # lightest bank: 0
+    b = sched.enqueue(t_add)                  # next: 1
+    c = sched.enqueue(t_add, banks=2, bank_ids=(3, 2))
+    res = sched.run()
+    assert res.requests[a].bank_ids == (0,)
+    assert res.requests[b].bank_ids == (1,)
+    # explicit placement is preserved in the given order (it pairs with
+    # offsets_ns positionally)
+    assert res.requests[c].bank_ids == (3, 2)
+
+
+def test_enqueue_validation():
+    _, trace = compile_trace("relu", 8)
+    sched = BankScheduler(n_banks=2)
+    with pytest.raises(ValueError, match="banks wide"):
+        sched.enqueue(trace, banks=3)
+    with pytest.raises(ValueError, match="bank_ids"):
+        sched.enqueue(trace, banks=2, bank_ids=(0,))
+    with pytest.raises(ValueError, match="out of range"):
+        sched.enqueue(trace, banks=2, bank_ids=(0, 5))
+    with pytest.raises(ValueError, match="offsets"):
+        sched.enqueue(trace, banks=2, offsets_ns=(0.0,))
+    with pytest.raises(ValueError, match="issue policy"):
+        BankScheduler(policy="random")
+    with pytest.raises(ValueError, match="refresh policy"):
+        BankScheduler(refresh_policy="never")
+    with pytest.raises(ValueError, match="n_banks"):
+        BankScheduler(n_banks=0)
+
+
+def test_request_timing_surface():
+    """queue/service split, per-tenant rollup, and the ReplayResult view."""
+    _, t_add = compile_trace("addition", 8)
+    _, t_rel = compile_trace("relu", 8)
+    sched = BankScheduler(n_banks=4)
+    sched.enqueue(t_add, tenant="A", name="add", lanes=64)
+    sched.enqueue(t_rel, tenant="B", name="relu", arrival_ns=100.0)
+    res = sched.run()
+    for r in res.requests:
+        assert r.finish_ns == pytest.approx(r.arrival_ns + r.queue_ns
+                                            + r.service_ns)
+        assert r.service_ns >= r.analytic_ns > 0
+        rr = r.replay_result()
+        assert rr.ns == pytest.approx(r.service_ns)
+        assert rr.stall_ns == pytest.approx(r.service_ns - r.analytic_ns)
+    ten = res.per_tenant()
+    assert set(ten) == {"A", "B"}
+    assert ten["A"]["n_requests"] == ten["B"]["n_requests"] == 1
+    assert ten["A"]["lanes"] == 64
+    # arrivals quantize up to the next DRAM cycle
+    tck = sched.timing.tCK_ns
+    assert res.requests[1].arrival_ns \
+        == pytest.approx(math.ceil(100.0 / tck) * tck)
+    assert max(ten["A"]["finish_ns"], ten["B"]["finish_ns"]) \
+        == pytest.approx(res.ns)
+
+
+# ---------------------------------------------------------------------------
+# Refresh policies: aware pauses beat eager abort + restart
+# ---------------------------------------------------------------------------
+
+
+def _refresh_heavy_mix(refresh_policy: str):
+    t = _timing(tREFI_ns=100.0, tRFC_ns=30.0)
+    sched = BankScheduler(timing=t, n_banks=16,
+                          refresh_policy=refresh_policy)
+    for i, op in enumerate(("addition", "multiplication", "relu",
+                            "xor_reduction") * 2):
+        _, trace = compile_trace(op, 8)
+        sched.enqueue(trace, banks=2, tenant=f"t{i % 2}", name=op)
+    return sched.run()
+
+
+def test_refresh_aware_beats_midsequence_stall():
+    """Under refresh-heavy timing the eager policy keeps losing in-flight
+    sequences to mid-sequence refresh (abort + restart, wasted ACT slots);
+    pausing between sequences avoids every restart and finishes sooner."""
+    aware = _refresh_heavy_mix("aware")
+    stall = _refresh_heavy_mix("stall")
+    assert stall.n_restarts > 0 and aware.n_restarts == 0
+    assert aware.ns <= stall.ns
+    # the wasted activations are visible in the ACT count
+    assert stall.n_acts > aware.n_acts
+    # aware's pauses are metered as refresh stall on the paused requests
+    assert aware.refresh_stall_ns > 0
+
+
+# ---------------------------------------------------------------------------
+# machine.submit() / drain(): futures, values, per-tenant attribution
+# ---------------------------------------------------------------------------
+
+
+def test_submit_drain_resolves_futures_with_correct_values():
+    m = SimdramMachine(mode="replay")
+    a = RNG.integers(0, 100, 64).astype(np.int32)
+    b = RNG.integers(0, 100, 64).astype(np.int32)
+    f_add = m.submit("addition", a, b, tenant="A")
+    f_rel = m.submit("relu", a, tenant="B")
+    f_mul = m.submit("multiplication", a, b, out_bits=16, tenant="A")
+    assert not f_add.done() and "pending" in repr(f_add)
+    res = m.drain()
+    assert res.n_requests == 3
+    assert all(f.done() for f in (f_add, f_rel, f_mul))
+    np.testing.assert_array_equal(np.asarray(f_add.result()), a + b)
+    np.testing.assert_array_equal(np.asarray(f_rel.result()), a)
+    # oracle: the direct bbop call (same program, same out_bits semantics)
+    from repro.ops import bbop_mul
+    np.testing.assert_array_equal(np.asarray(f_mul.result()),
+                                  np.asarray(bbop_mul(a, b, 8, out_bits=16)))
+    # scheduler timing attaches to each future
+    for f in (f_add, f_rel, f_mul):
+        assert f.timing is not None and f.timing.tenant == f.tenant
+        assert f.replay.ns == pytest.approx(f.timing.service_ns)
+        assert 0 < f.finish_ns <= res.ns
+    assert {f.timing.name for f in (f_add, f_rel, f_mul)} \
+        == {"addition/8b", "relu/8b", "multiplication/8b"}
+    assert set(res.per_tenant()) == {"A", "B"}
+
+
+def test_future_result_auto_drains():
+    m = SimdramMachine()
+    a = RNG.integers(0, 100, 32).astype(np.int32)
+    fut = m.submit("relu", a)
+    np.testing.assert_array_equal(np.asarray(fut.result()), a)
+    assert fut.done() and fut.timing is not None
+
+
+def test_submit_banked_operands_schedule_wide():
+    m = SimdramMachine()
+    vals = jnp.asarray(RNG.integers(0, 100, (2, 32)), jnp.int32)
+    pa = BitplaneArray.from_values(vals, 8)
+    fut = m.submit("addition", pa, pa)
+    m.drain(n_banks=4)
+    assert fut.timing.bank_ids == (0, 1)
+    assert fut.timing.lanes == 2 * 32
+    out = fut.result()
+    assert isinstance(out, BitplaneArray) and out.banked
+    np.testing.assert_array_equal(np.asarray(out.to_values()), vals + vals)
+
+
+def test_submit_validation_errors():
+    m = SimdramMachine()
+    with pytest.raises(KeyError, match="unknown operation"):
+        m.submit("frobnicate", [1, 2])
+    m.submit("addition", np.arange(4, dtype=np.int32))   # missing operand
+    with pytest.raises(TypeError, match="takes 2 operands"):
+        m.drain()
+    vals = jnp.asarray(RNG.integers(0, 100, (2, 32)), jnp.int32)
+    banked = BitplaneArray.from_values(vals, 8)
+    flat = BitplaneArray.from_values(jnp.arange(64, dtype=jnp.int32), 8)
+    m.submit("addition", banked, flat)
+    with pytest.raises(ValueError, match="shapes disagree"):
+        m.drain()
+
+
+def test_tenant_stats_sum_to_machine_totals():
+    """Every meter summed over ``stats.tenants`` reproduces the machine
+    total exactly — transposition charged during operand prep, execution
+    charged during the heterogeneous dispatch, all in replay mode."""
+    m = SimdramMachine(mode="replay")
+    a = RNG.integers(0, 100, 64).astype(np.int32)
+    b = RNG.integers(0, 100, 64).astype(np.int32)
+    for tenant, op in (("A", "addition"), ("B", "relu"), ("A", "maximum"),
+                       ("B", "subtraction")):
+        if op == "relu":
+            m.submit(op, a, tenant=tenant)
+        else:
+            m.submit(op, a, b, tenant=tenant)
+    m.drain()
+    tenants = list(m.stats.tenants.values())
+    assert set(m.stats.tenants) == {"A", "B"}
+    for meter in ("exec_ns", "exec_nj", "replay_ns", "transpose_ns",
+                  "movement_ns", "total_ns", "n_programs", "n_transposes",
+                  "elem_ops"):
+        total = getattr(m.stats, meter)
+        by_tenant = sum(getattr(st, meter) for st in tenants)
+        assert by_tenant == pytest.approx(total), meter
+        if meter != "movement_ns":      # unbanked ops relocate no rows
+            assert total > 0, meter
+
+
+def test_mixed_two_tenant_drain_beats_serialized_single_stream():
+    """The bench-row scenario: two heterogeneous tenant streams drained
+    through one scheduler overlap across banks, beating the sum of
+    serialized solo replays of the same requests."""
+    rt = TraceReplayTiming()
+    jobs = [("A", "addition"), ("B", "multiplication"), ("A", "maximum"),
+            ("B", "minimum"), ("A", "subtraction"), ("B", "relu")]
+    serial = 0.0
+    m = SimdramMachine()
+    a = RNG.integers(0, 100, 64).astype(np.int32)
+    b = RNG.integers(0, 100, 64).astype(np.int32)
+    for tenant, op in jobs:
+        _, trace = compile_trace(op, 8)
+        serial += rt.replay(trace).ns
+        args = (a,) if op == "relu" else (a, b)
+        m.submit(op, *args, tenant=tenant)
+    res = m.drain(n_banks=8)
+    assert res.ns < serial
+    ten = res.per_tenant()
+    assert ten["A"]["n_requests"] == 3 and ten["B"]["n_requests"] == 3
+
+
+def test_empty_drain_returns_empty_schedule():
+    m = SimdramMachine()
+    res = m.drain()
+    assert res.n_requests == 0 and res.ns == 0.0 and res.requests == ()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: PerfStats.snapshot() — structured, JSON-safe, feeds report()
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_is_structured_and_json_safe():
+    m = SimdramMachine(mode="replay")
+    a = RNG.integers(0, 100, 64).astype(np.int32)
+    m.submit("addition", a, a, tenant="svc")
+    m.drain()
+    snap = m.stats.snapshot()
+    json.dumps(snap)                       # plain floats/ints/dicts only
+    assert set(snap) == {"mode", "refresh_phase", "totals", "execute",
+                         "replay", "movement", "transposition", "per_op",
+                         "tenants"}
+    assert snap["totals"]["ns"] == pytest.approx(m.stats.total_ns)
+    assert snap["execute"]["n_programs"] == 1
+    assert snap["movement"]["per_kind"].keys() == {"intra", "inter"}
+    assert snap["transposition"]["per_kind"].keys() == {"to", "from"}
+    assert snap["replay"]["ns"] == pytest.approx(m.stats.replay_ns)
+    assert "addition/8b" in snap["per_op"]
+    # tenants nest recursively with the same shape
+    sub = snap["tenants"]["svc"]
+    assert set(sub) == set(snap) and sub["tenants"] == {}
+    assert sub["execute"]["n_programs"] == 1
+    # report() renders from the snapshot, including the tenant rollup
+    rep = m.stats.report()
+    assert "tenant svc" in rep and "addition/8b" in rep
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: bank-skew offsets are scoped per machine session
+# ---------------------------------------------------------------------------
+
+
+def test_bank_skew_scoped_per_machine():
+    """A scatter recorded under machine A's session must not feed replay
+    offsets to machine B replaying the same planes — and must still feed
+    A's next op after B's interleaved use."""
+    m1 = SimdramMachine(mode="replay")
+    m2 = SimdramMachine(mode="replay")
+    vals = jnp.asarray(RNG.integers(0, 256, 128), jnp.int32)
+    with timed(mode="replay") as st:
+        with m1.session():
+            banked = BitplaneArray.from_values(vals, 8).rebank(2)
+        assert len(st._bank_skew) == 1
+        bbop_add(banked, banked, 8, machine=m2)
+        # foreign machine: the pending skew is left for its rightful owner
+        assert len(st._bank_skew) == 1
+        spread_foreign = st.replay_bank_spread_ns
+        bbop_add(banked, banked, 8, machine=m1)
+        assert len(st._bank_skew) == 0
+        spread_owner = st.replay_bank_spread_ns - spread_foreign
+    skew = m1.model.movement.inter_bank_ns(16) / 2
+    assert spread_owner >= skew > spread_foreign
+
+
+# ---------------------------------------------------------------------------
+# Satellite: execute_heterogeneous ≡ solo dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_execute_heterogeneous_matches_solo_dispatch():
+    prog_a, trace_a = compile_trace("addition", 8)
+    prog_r, trace_r = compile_trace("relu", 8)
+
+    def planes(shape):
+        v = jnp.asarray(RNG.integers(0, 100, shape), jnp.int32)
+        return BitplaneArray.from_values(v, 8).planes
+
+    items = [
+        (prog_a, trace_a, {"a": planes(32), "b": planes(32)}, None, None),
+        (prog_a, trace_a, {"a": planes(32), "b": planes(32)}, None, None),
+        (prog_r, trace_r, {"a": planes(32)}, None, None),
+        (prog_a, trace_a, {"a": planes((2, 32)), "b": planes((2, 32))},
+         {"out": 9}, None),                      # banked: dispatches solo
+    ]
+    got = execute_heterogeneous(items)
+    assert len(got) == len(items)
+    for item, outs in zip(items, got):
+        prog, trace, ops, ob, be = item
+        want = execute_lowered(prog, trace, ops, out_bits=ob, backend=be)
+        assert outs.keys() == want.keys()
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(outs[k]),
+                                          np.asarray(want[k]))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: greedy_decode takes the uniform machine= kwarg
+# ---------------------------------------------------------------------------
+
+
+def _tiny_decode(machine=None, sampler_machine=None):
+    from repro.configs import get_reduced
+    from repro.models.params import init_params
+    from repro.models.transformer import model_defs
+    from repro.serve.decode import greedy_decode
+    cfg = dataclasses.replace(get_reduced("qwen1_5_0_5b"), remat="none")
+    params = init_params(model_defs(cfg), jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (2, 3), 0, cfg.vocab)
+    return greedy_decode(params, cfg, prompt, steps=2, sampler="simdram",
+                         machine=machine, sampler_machine=sampler_machine)
+
+
+def test_greedy_decode_machine_kwarg_and_deprecated_alias():
+    m_new = SimdramMachine()
+    m_old = SimdramMachine()
+    out_new = _tiny_decode(machine=m_new)
+    with pytest.warns(DeprecationWarning, match="sampler_machine"):
+        out_old = _tiny_decode(sampler_machine=m_old)
+    np.testing.assert_array_equal(np.asarray(out_new), np.asarray(out_old))
+    # both spellings drove their machine: the tournament charged its stats
+    assert m_new.stats.n_programs > 0
+    assert m_old.stats.n_programs == m_new.stats.n_programs
+
+
+def test_greedy_decode_conflicting_machine_kwargs_rejected():
+    from repro.serve.decode import greedy_decode
+    m1, m2 = SimdramMachine(), SimdramMachine()
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(ValueError, match="machine="):
+        greedy_decode(None, None, jnp.zeros((1, 1), jnp.int32), 1,
+                      machine=m1, sampler_machine=m2)
