@@ -15,8 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.circuits import compile_operation
 from repro.ops import (bbop_add, bbop_bitcount, bbop_greater,
-                       bbop_greater_equal, bbop_if_else, bbop_mul, bbop_sub,
-                       bbop_xor)
+                       bbop_greater_equal, bbop_if_else, bbop_mul, bbop_sub)
 from repro.simdram.timing import SimdramPerfModel
 
 from .common import row

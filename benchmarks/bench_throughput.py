@@ -184,6 +184,29 @@ def cache_and_replay(smoke: bool = False) -> None:
         f"cache_hit_rate={st['hit_rate']:.3f} "
         f"cold_misses={after_cold['misses']}")
 
+    # TraceLint overhead: cold = the one-time static liveness pass a fresh
+    # lowering pays under verify=True; warm = the memoized re-check every
+    # later cache hit pays.  Gated: lint_cold_us >= lint_warm_us (the memo
+    # must actually short-circuit the pass).
+    import dataclasses as _dc
+    lint_keys = [("addition", 8), ("multiplication", 8), ("relu", 8),
+                 ("abs", 8), ("division", 8)]
+    lint_traces = [compile_trace(nm, nb, verify=False)[1]
+                   for nm, nb in lint_keys]
+    n_cmds = sum(t.cmds.shape[0] for t in lint_traces)
+
+    def lint_fresh():
+        for t in lint_traces:
+            _dc.replace(t, _lint=None).lint()
+
+    _, lint_cold_us = timed(lint_fresh, repeat=2 if smoke else 5)
+    _, lint_warm_us = timed(lambda: [t.lint() for t in lint_traces],
+                            repeat=2 if smoke else 5)
+    row(f"lint/compile_overhead/{len(lint_traces)}ops", lint_cold_us,
+        f"lint_cold_us={lint_cold_us:.1f} lint_warm_us={lint_warm_us:.2f} "
+        f"lint_memo_speedup={lint_cold_us / max(lint_warm_us, 1e-9):.0f}x "
+        f"n_cmds={n_cmds}")
+
     # session-machine μProgram Memory: an explicit SimdramMachine running
     # the same chain through its own bounded cache — hit rate gated like
     # the process-wide cache above
@@ -367,7 +390,7 @@ def scheduler_rows(smoke: bool = False) -> None:
 
 def live(smoke: bool = False) -> None:
     from repro.ops import (bbop_add, bbop_greater, bbop_mul, bbop_relu,
-                           compile_bbop, simdram_pipeline)
+                           simdram_pipeline)
 
     n = 512 if smoke else 4096
     banks = 16

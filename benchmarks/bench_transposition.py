@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.circuits import ALL_OPS, compile_operation
+from repro.core.circuits import compile_operation
 from repro.simdram.timing import SimdramPerfModel, TranspositionModel
 
 from .common import row, timed

@@ -79,6 +79,9 @@ def bad_gate_rows(text: str) -> list[str]:
          "bank-level packing can only raise aggregate throughput"),
         ("sched_stall_ns", "sched_aware_ns",
          "refresh-aware pausing avoids aborted sequences"),
+        ("lint_cold_us", "lint_warm_us",
+         "the memoized re-lint on cache hits must be cheaper than the "
+         "first full liveness pass"),
     )
     bad = []
     for line in text.splitlines():

@@ -20,7 +20,7 @@ from repro.core.executor import from_planes, run_program
 from repro.core.graph import lit_not
 from repro.core.uprogram import DRow
 from repro.ops import (SimdramMachine, bbop_add, bbop_greater, bbop_if_else,
-                       bbop_mul, bbop_relu, bbop_sub, simdram_pipeline)
+                       bbop_mul, bbop_relu, bbop_sub)
 from repro.simdram.layout import reset_transpose_stats, transpose_counts
 from repro.simdram.timing import DRAMTiming, SimdramPerfModel
 

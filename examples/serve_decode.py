@@ -6,7 +6,6 @@ modeled DRAM cost per decoded token.
     PYTHONPATH=src python examples/serve_decode.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.models.params import init_params

@@ -5,7 +5,6 @@ stack — sharded params, fault-tolerant loop, checkpointing, synthetic data.
 (defaults to a short smoke run; pass --steps 300 for the full example)
 """
 import argparse
-import dataclasses
 
 import jax
 

@@ -8,7 +8,6 @@ config file in this package exports ``CONFIG`` (full size, dry-run only) and
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

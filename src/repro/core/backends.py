@@ -257,10 +257,13 @@ class PerfStats:
     # (strong refs so ids cannot be recycled, FIFO-bounded by
     # _RESIDENT_CAP); consumed ids trigger movement charges
     _resident: dict = dataclasses.field(default_factory=dict, repr=False)
-    # id(prog) → (latency_ns, energy_nj, n_commands, prog) — scoped to this
-    # accumulator so cache entries die with it, FIFO-bounded by _COST_CAP
+    # trace.fingerprint → (latency_ns, energy_nj, n_commands) — scoped to
+    # this accumulator so cache entries die with it, FIFO-bounded by
+    # _COST_CAP.  Content-keyed: an ``id()`` key could alias once the entry
+    # no longer pins its program and the allocator reuses the address for a
+    # new one, and it missed on every recompile of the same op anyway.
     _prog_costs: dict = dataclasses.field(default_factory=dict, repr=False)
-    # (id(trace), banks, offsets) → (ReplayResult, trace), same bounds
+    # (trace.fingerprint, banks, offsets, phase) → ReplayResult, same bounds
     _replay_costs: dict = dataclasses.field(default_factory=dict, repr=False)
     # id(planes) → (per-bank issue offsets, planes) for inter-bank scatters
     # (data-arrival skew; strong refs keep ids stable, FIFO-bounded like
@@ -272,35 +275,40 @@ class PerfStats:
             raise ValueError(f"unknown timing mode {self.mode!r} "
                              "(expected 'analytic' or 'replay')")
 
-    def _prog_cost(self, prog: UProgram) -> tuple:
-        hit = self._prog_costs.get(id(prog))
+    def _prog_cost(self, prog: UProgram, trace: LoweredTrace) -> tuple:
+        hit = self._prog_costs.get(trace.fingerprint)
         if hit is None:
             mix = prog.command_mix()
             hit = (self.model.latency_ns(prog), self.model.energy_nj(prog),
-                   mix["AAP"] + mix["AP"], prog)
-            self._prog_costs[id(prog)] = hit
+                   mix["AAP"] + mix["AP"])
+            self._prog_costs[trace.fingerprint] = hit
             while len(self._prog_costs) > _COST_CAP:
                 del self._prog_costs[next(iter(self._prog_costs))]
         return hit
 
     def _replay_cost(self, trace: LoweredTrace, banks: int, offsets,
                      phase_ns: float = 0.0):
-        key = (id(trace), banks, offsets, round(phase_ns, 3))
+        key = (trace.fingerprint, banks, offsets, round(phase_ns, 3))
         hit = self._replay_costs.get(key)
         if hit is None:
-            hit = (self.model.replay_result(trace, banks=banks,
-                                            offsets_ns=offsets,
-                                            refresh_phase_ns=phase_ns), trace)
+            hit = self.model.replay_result(trace, banks=banks,
+                                           offsets_ns=offsets,
+                                           refresh_phase_ns=phase_ns)
             self._replay_costs[key] = hit
             while len(self._replay_costs) > _COST_CAP:
                 del self._replay_costs[next(iter(self._replay_costs))]
-        return hit[0]
+        return hit
 
     # -- charging (called by execute_program / the layout hooks) ------------
     def charge_program(self, prog: UProgram, banks: int, lanes: int,
                        trace: LoweredTrace | None = None,
                        offsets=None) -> None:
-        lat, en, cmds, _ = self._prog_cost(prog)
+        replayable = trace is not None
+        if trace is None:
+            # analytic-only callers: the lowering memo makes this cheap,
+            # and the trace fingerprint is the stable cost-memo key
+            trace = lower_program(prog)
+        lat, en, cmds = self._prog_cost(prog, trace)
         self.exec_ns += lat
         self.exec_nj += en * banks
         self.n_programs += 1
@@ -313,7 +321,7 @@ class PerfStats:
         d["calls"] += 1
         d["ns"] += lat
         d["nj"] += en * banks
-        if self.mode == "replay" and trace is not None:
+        if self.mode == "replay" and replayable:
             # phase = the replay clock *before* this op starts
             phase_ns = self.replay_ns if self.refresh_phase else 0.0
             res = self._replay_cost(trace, banks, offsets, phase_ns)

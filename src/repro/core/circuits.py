@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 
 from .compiler import SliceSpec, compile_flat, compile_slice
-from .graph import CONST0, CONST1, LogicGraph, lit_not
+from .graph import CONST0, LogicGraph, lit_not
 from .uprogram import AAP, C0, DRow, UProgram, concat_programs
 
 # ---------------------------------------------------------------------------
@@ -292,7 +292,7 @@ def compile_division(n_bits: int, optimize: bool = True) -> UProgram:
     indices' optimization for shifts under vertical layout).  Paper reports
     8n²+12n with a non-restoring scheme; our restoring scheme is ~16n² —
     recorded as a deviation in EXPERIMENTS.md."""
-    from .uprogram import P_DCC0, P_NDCC0, Port
+    from .uprogram import P_DCC0, P_NDCC0
 
     n = n_bits
     progs: list[UProgram] = []

@@ -29,9 +29,8 @@ paper's Table 5 command counts (e.g. 8n+1 for addition) exactly.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 
-from .graph import CONST0, CONST1, MAJ, PI, LogicGraph, lit_neg, lit_node
+from .graph import MAJ, PI, LogicGraph, lit_neg, lit_node
 from .uprogram import (AAP, AP, C0, C1, CRow, DCC_CELLS, DRow, N_B_CELLS,
                        PAIR_ADDRESSES, Port, T_CELLS, UProgram)
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .uprogram import (AAP, AP, C0, C1, CRow, DRow, N_B_CELLS, Port, UProgram)
+from .uprogram import AAP, AP, CRow, DRow, N_B_CELLS, Port, UProgram
 
 WORD = 64
 

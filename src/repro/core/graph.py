@@ -16,7 +16,6 @@ mirrors the paper's C-group rows C0/C1.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, Sequence
 
 # ---------------------------------------------------------------------------
 # Literals

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import threading
 import weakref
 
@@ -144,10 +145,36 @@ class LoweredTrace:
     outputs: tuple = ()
     scratch: tuple = ()
     _decoded: object = dataclasses.field(default=None, repr=False)
+    _lint: object = dataclasses.field(default=None, repr=False)
+    _fingerprint: object = dataclasses.field(default=None, repr=False)
 
     @property
     def n_rows(self) -> int:
         return len(self.row_index)
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable content hash of the trace (commands, seqs, row map and
+        metadata) — identical traces share it across object identities, so
+        it is the key for cost memos that must survive recompiles and can
+        never alias the way a recycled ``id()`` can."""
+        if self._fingerprint is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(repr((self.name, self.n_bits, self.d_rows, self.inputs,
+                           self.outputs, self.scratch)).encode())
+            h.update(np.ascontiguousarray(self.cmds, np.int32).tobytes())
+            h.update(np.ascontiguousarray(self.seqs, np.int32).tobytes())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
+
+    def lint(self, max_diagnostics: int = 100):
+        """Statically verify this trace (see :mod:`repro.core.tracelint`);
+        the :class:`~repro.core.tracelint.LintReport` is memoized on the
+        trace, so cached compiles pay for verification exactly once."""
+        if self._lint is None:
+            from .tracelint import lint_trace
+            self._lint = lint_trace(self, max_diagnostics)
+        return self._lint
 
     @property
     def n_commands(self) -> int:
@@ -292,7 +319,12 @@ class TraceCache:
     ``compile_fn(name, n_bits, optimize) → UProgram`` resolves a miss —
     ``None`` means the process-wide op registry
     (:func:`repro.core.circuits.compile_operation`).  ``capacity=None``
-    is unbounded.  All access is lock-guarded: hammering one cache from
+    is unbounded.  ``verify=True`` (default) statically verifies every
+    freshly lowered trace (:mod:`repro.core.tracelint`) before it enters
+    the cache: a trace with lint errors raises
+    :class:`~repro.core.tracelint.TraceLintError` and is never cached, and
+    because the report is memoized on the trace the cached hot path never
+    pays for verification again.  All access is lock-guarded: hammering one cache from
     many threads keeps counters exact and never compiles a key twice.
     (The lock is deliberately held across the compile itself, so a cold
     miss serializes other misses on the same cache — the workloads this
@@ -301,10 +333,12 @@ class TraceCache:
     concurrency.)
     """
 
-    def __init__(self, capacity: int | None = None, compile_fn=None) -> None:
+    def __init__(self, capacity: int | None = None, compile_fn=None,
+                 verify: bool = True) -> None:
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
         self.capacity = capacity
+        self.verify = verify
         self._compile_fn = compile_fn
         self._entries: collections.OrderedDict[
             tuple, tuple[UProgram, LoweredTrace]] = collections.OrderedDict()
@@ -320,9 +354,14 @@ class TraceCache:
         from .circuits import compile_operation
         return compile_operation(name, n_bits, optimize=optimize)
 
-    def get(self, name: str, n_bits: int,
-            optimize: bool = True) -> tuple[UProgram, LoweredTrace]:
-        """Fetch-or-compile the ``(UProgram, LoweredTrace)`` pair."""
+    def get(self, name: str, n_bits: int, optimize: bool = True,
+            verify: bool | None = None) -> tuple[UProgram, LoweredTrace]:
+        """Fetch-or-compile the ``(UProgram, LoweredTrace)`` pair.
+
+        ``verify=None`` uses the cache's default (see the class docstring);
+        a trace that fails verification raises
+        :class:`~repro.core.tracelint.TraceLintError` and never enters the
+        cache."""
         key = (name, int(n_bits), bool(optimize))
         # the whole miss path holds the lock: compiling outside it would
         # let two threads synthesize the same key concurrently and tear
@@ -332,10 +371,17 @@ class TraceCache:
             if hit is not None:
                 self._hits += 1
                 self._entries.move_to_end(key)
+                if self.verify if verify is None else verify:
+                    # memoized on the trace — a no-op unless the entry was
+                    # inserted with verify=False and has errors
+                    hit[1].lint().raise_for_errors()
                 return hit
             self._misses += 1
             prog = self._compile(name, n_bits, bool(optimize))
-            entry = (prog, lower_program(prog))
+            trace = lower_program(prog)
+            if self.verify if verify is None else verify:
+                trace.lint().raise_for_errors()
+            entry = (prog, trace)
             self._entries[key] = entry
             while self.capacity is not None and \
                     len(self._entries) > self.capacity:
@@ -404,15 +450,18 @@ GLOBAL_TRACE_CACHE = TraceCache()
 _COMPILE_CACHE = GLOBAL_TRACE_CACHE._entries
 
 
-def compile_trace(name: str, n_bits: int,
-                  optimize: bool = True) -> tuple[UProgram, LoweredTrace]:
+def compile_trace(name: str, n_bits: int, optimize: bool = True,
+                  verify: bool | None = None
+                  ) -> tuple[UProgram, LoweredTrace]:
     """Compile + lower an operation once per ``(op, n_bits, optimize)``.
 
     Returns the cached ``(UProgram, LoweredTrace)`` pair from the
     process-wide :data:`GLOBAL_TRACE_CACHE`; synthesis, row allocation and
-    lowering never re-run for a cached key.
+    lowering never re-run for a cached key.  Fresh traces are statically
+    verified by default (``verify=``, see :mod:`repro.core.tracelint`);
+    the memoized report makes this free on every later fetch.
     """
-    return GLOBAL_TRACE_CACHE.get(name, n_bits, optimize)
+    return GLOBAL_TRACE_CACHE.get(name, n_bits, optimize, verify=verify)
 
 
 def trace_cache_stats() -> dict:

@@ -23,7 +23,7 @@ audited (``UProgram.used_triples``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Sequence
 
 # ---------------------------------------------------------------------------
 # B-group cells & ports

@@ -12,11 +12,9 @@ Stage parameters are stacked on a leading axis of size P and sharded
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+from jax.sharding import Mesh, PartitionSpec as PS
 from jax.experimental.shard_map import shard_map
 
 

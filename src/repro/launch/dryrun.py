@@ -22,7 +22,7 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as PS
+from jax.sharding import PartitionSpec as PS
 
 from ..configs import ARCHS, get_config
 from ..configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable

@@ -12,20 +12,16 @@ slices per host).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as PS
+from jax.sharding import PartitionSpec as PS
 
 from ..configs import get_config, get_reduced
 from ..distributed.checkpoint import CheckpointManager
 from ..distributed.compat import shard_map_compat
 from ..distributed.failover import FailoverConfig, FailoverRunner
-from ..distributed.sharding import (batch_shardings, data_pspec, replicated,
-                                    tree_shardings)
+from ..distributed.sharding import replicated, tree_shardings
 from ..models.params import init_params
 from ..models.transformer import model_defs
 from ..train.data import DataConfig, synthetic_batch

@@ -19,7 +19,6 @@ model code only names logical axes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -18,11 +18,17 @@ from .bbops import (bbop_abs, bbop_add, bbop_and, bbop_bitcount, bbop_div,
                     bbop_relu, bbop_sub, bbop_xor, compile_bbop,
                     planes_of, simdram_pipeline, values_of)
 
-__all__ = [n for n in dir() if n.startswith("bbop") or n in
-           ("compile_bbop", "planes_of", "values_of", "BitplaneArray",
-            "simdram_pipeline", "use_backend", "set_default_backend",
-            "register_backend", "list_backends", "execute_program",
-            "execute_heterogeneous", "PerfStats", "timed", "SimdramMachine",
-            "SimdramFuture", "BankScheduler", "ScheduleResult",
-            "RequestTiming", "default_machine", "current_machine",
-            "register_operation", "list_operations")]
+# Static so ruff sees the imports above as intentional re-exports (F401)
+__all__ = [
+    "bbop_abs", "bbop_add", "bbop_and", "bbop_bitcount", "bbop_div",
+    "bbop_equal", "bbop_greater", "bbop_greater_equal", "bbop_if_else",
+    "bbop_max", "bbop_min", "bbop_mul", "bbop_or", "bbop_relu", "bbop_sub",
+    "bbop_xor",
+    "compile_bbop", "planes_of", "values_of", "BitplaneArray",
+    "simdram_pipeline", "use_backend", "set_default_backend",
+    "register_backend", "list_backends", "execute_program",
+    "execute_heterogeneous", "PerfStats", "timed", "SimdramMachine",
+    "SimdramFuture", "BankScheduler", "ScheduleResult",
+    "RequestTiming", "default_machine", "current_machine",
+    "register_operation", "list_operations",
+]

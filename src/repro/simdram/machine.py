@@ -67,8 +67,7 @@ import threading
 
 import jax.numpy as jnp
 
-from ..core.backends import (PerfStats, execute_heterogeneous,
-                             execute_lowered)
+from ..core.backends import PerfStats, execute_heterogeneous
 from ..core.backends import timed as _timed_execution
 from ..core.compiler import SliceSpec, compile_slice
 from ..core.graph import LogicGraph
@@ -336,7 +335,8 @@ class SimdramMachine:
                   invariants: dict | None = None, states: dict | None = None,
                   arrays_in: tuple | None = None, out_array: str | None = "out",
                   epilogue_outputs: dict | None = None, compile_fn=None,
-                  validate: bool = True, override: bool = False) -> BoundOp:
+                  validate: bool = True, verify: bool | int = True,
+                  override: bool = False) -> BoundOp:
         """Register a user-defined operation with this machine (Steps 1–2).
 
         Three entry points, from highest- to lowest-level:
@@ -361,6 +361,18 @@ class SimdramMachine:
         change.  ``validate=True`` checks the Step-1 synthesis: the
         optimized MIG must be functionally equivalent to the naive
         MAJ/NOT substitution on every input assignment.
+
+        ``verify`` statically verifies the op's *lowered command trace*
+        (:mod:`repro.core.tracelint`) at registration: the op is compiled
+        once at a probe width (8 bits, or pass ``verify=<n_bits>`` for
+        compile paths that only support other widths; ``verify=False``
+        skips), and a trace with lint errors — a read of an uninitialized
+        compute cell, a clobbered operand row, an undefined output row, a
+        malformed seqs table — rolls the registration back and raises
+        :class:`~repro.core.tracelint.TraceLintError` with the full
+        report, so a broken ``compile_fn`` can never reach a backend or a
+        tenant's bank.  The probe compiles outside the μProgram Memory, so
+        registration never perturbs cache entries or hit/miss counters.
 
         On the :func:`default_machine`, definition lands in the
         process-wide op registry so the ambient ``bbop``-style surface
@@ -399,6 +411,19 @@ class SimdramMachine:
                 return compile_slice(_spec, n_bits, optimize=optimize)
 
         self._register(name, compile_fn, override=override)
+        if verify:
+            from ..core.trace import lower_program
+            from ..core.tracelint import TraceLintError
+            probe_bits = 8 if verify is True else int(verify)
+            try:
+                # probe outside the μProgram Memory: registration must not
+                # perturb cache entries/counters for ops never executed
+                trace = lower_program(self._compile(name, probe_bits, True))
+                trace.lint().raise_for_errors()
+            except TraceLintError:
+                # reject at registration: a broken op must not stay callable
+                self._unregister(name)
+                raise
         return self.op(name)
 
     def _register(self, name: str, compile_fn, override: bool) -> None:
@@ -407,6 +432,10 @@ class SimdramMachine:
                              "machine (pass override=True to replace it)")
         self._ops[name] = compile_fn
         # a redefinition must not serve the old definition's compiles
+        self.memory.invalidate(name)
+
+    def _unregister(self, name: str) -> None:
+        self._ops.pop(name, None)
         self.memory.invalidate(name)
 
     def ops(self) -> tuple[str, ...]:
@@ -653,6 +682,10 @@ class _DefaultMachine(SimdramMachine):
     def _register(self, name: str, compile_fn, override: bool) -> None:
         from ..core.circuits import register_operation
         register_operation(name, compile_fn, override=override)
+
+    def _unregister(self, name: str) -> None:
+        from ..core.circuits import unregister_operation
+        unregister_operation(name)
 
 
 _DEFAULT_MACHINE: SimdramMachine | None = None

@@ -212,12 +212,22 @@ class BankScheduler:
     refresh_phase_ns : anchor the refresh-window grid this long after the
         previous refresh epoch (same convention as
         :meth:`TraceReplayTiming.replay`).
+    verify : statically verify every enqueued trace
+        (:mod:`repro.core.tracelint` — memoized per trace, so cached
+        compiles cost nothing here) and run the cross-trace packing pass:
+        two co-scheduled requests from *different tenants* sharing a bank
+        with overlapping D-row footprints are flagged as ``bank-overlap``
+        warnings on :attr:`lint_diagnostics` (an append-only log across
+        busy periods; per-period pairing state resets with :meth:`run`).
+        A trace with lint *errors* is rejected at ``enqueue`` with
+        :class:`~repro.core.tracelint.TraceLintError`.
     """
 
     def __init__(self, timing: DRAMTiming | None = None,
                  n_banks: int | None = None, policy: str = "frfcfs",
                  refresh_policy: str = "aware",
-                 refresh_phase_ns: float = 0.0) -> None:
+                 refresh_phase_ns: float = 0.0,
+                 verify: bool = True) -> None:
         if policy not in _ISSUE_POLICIES:
             raise ValueError(f"unknown issue policy {policy!r} "
                              f"(expected one of {_ISSUE_POLICIES})")
@@ -236,6 +246,11 @@ class BankScheduler:
         self._queues: list[list[_Stream]] = [[] for _ in range(self.n_banks)]
         self._load = [0] * self.n_banks      # enqueued ACT-cycles per bank
         self._requests: list[_Request] = []
+        self.verify = verify
+        # (name, tenant, D-row footprint, bank set) per request this busy
+        # period — the cross-trace bank-overlap lint pairs against these
+        self._lint_entries: list[tuple[str, str, frozenset, set]] = []
+        self.lint_diagnostics: list = []
 
     def __repr__(self) -> str:
         pending = sum(len(q) for q in self._queues)
@@ -278,6 +293,15 @@ class BankScheduler:
         if offsets_ns is not None and len(offsets_ns) != banks:
             raise ValueError(f"{len(offsets_ns)} issue offsets for "
                              f"{banks} banks")
+        if self.verify:
+            from ..core.tracelint import lint_packing, row_footprint
+            # per-trace lint is memoized on the trace — a compiled trace
+            # was already verified at compile time and costs nothing here
+            trace.lint().raise_for_errors()
+            entry = (name, tenant, row_footprint(trace), set(bank_ids))
+            for prior in self._lint_entries:
+                self.lint_diagnostics.extend(lint_packing([prior, entry]))
+            self._lint_entries.append(entry)
         tck = self.timing.tCK_ns
         kinds = trace.seqs[:, 0].tolist()
         mix = trace.command_mix()
@@ -459,4 +483,5 @@ class BankScheduler:
         self._queues = [[] for _ in range(self.n_banks)]
         self._load = [0] * self.n_banks
         self._requests = []
+        self._lint_entries = []
         return result

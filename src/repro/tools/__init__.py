@@ -1,0 +1,1 @@
+"""Developer-facing command-line tools (``python -m repro.tools.<tool>``)."""

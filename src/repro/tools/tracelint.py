@@ -1,0 +1,97 @@
+"""Sweep every registered operation × bit width through TraceLint.
+
+    PYTHONPATH=src python -m repro.tools.tracelint [--bits 4,8,16,32]
+                                                   [--ops add,mul,...]
+                                                   [--optimize on|off|both]
+
+Compiles each (operation, n_bits, optimize) key, runs the static verifier
+(:mod:`repro.core.tracelint`) on the lowered trace and prints one line per
+key; any lint *error* (or a compile failure) fails the sweep with a
+non-zero exit.  This is the CI lint gate over the op registry — the same
+checks ``compile_trace(..., verify=True)`` applies inline, but exhaustively
+and with the full report rendered.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+DEFAULT_BITS = (4, 8, 16, 32)
+
+
+def sweep(ops: tuple[str, ...], bits: tuple[int, ...],
+          optimizes: tuple[bool, ...], verbose: bool = False) -> int:
+    """Lint every (op, n_bits, optimize) key; returns the number of keys
+    with lint errors or compile failures."""
+    from ..core.trace import compile_trace
+
+    failed = 0
+    n_warn = 0
+    t0 = time.perf_counter()
+    for name in ops:
+        for n_bits in bits:
+            for optimize in optimizes:
+                key = f"{name}/{n_bits}b" + ("" if optimize else "/ambit")
+                try:
+                    # verify=False: collect the full report ourselves
+                    # instead of stopping at the first TraceLintError
+                    _, trace = compile_trace(name, n_bits, optimize,
+                                             verify=False)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    print(f"FAIL  {key}: compile error: {e}")
+                    failed += 1
+                    continue
+                report = trace.lint()
+                n_warn += len(report.warnings)
+                if not report.ok:
+                    failed += 1
+                    print(f"FAIL  {key}")
+                    print("      " + report.render().replace("\n", "\n      "))
+                elif report.warnings and verbose:
+                    print(f"warn  {key}")
+                    print("      " + report.render().replace("\n", "\n      "))
+                elif verbose:
+                    print(f"ok    {key}  ({trace.cmds.shape[0]} cmds, "
+                          f"{trace.n_rows} rows)")
+    dt = time.perf_counter() - t0
+    n_keys = len(ops) * len(bits) * len(optimizes)
+    print(f"tracelint: {n_keys} trace(s) checked in {dt:.1f}s — "
+          f"{failed} failing, {n_warn} warning(s)")
+    return failed
+
+
+def main(argv: list[str] | None = None) -> int:
+    from ..core.circuits import list_operations
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tools.tracelint",
+        description="statically verify registered ops' lowered traces")
+    ap.add_argument("--ops", default=None,
+                    help="comma-separated op names (default: every "
+                         "registered operation)")
+    ap.add_argument("--bits", default=",".join(map(str, DEFAULT_BITS)),
+                    help="comma-separated element widths (default: "
+                         "%(default)s)")
+    ap.add_argument("--optimize", choices=("on", "off", "both"),
+                    default="on",
+                    help="MIG optimization: on (default), off (the Ambit "
+                         "baseline lowering) or both")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print per-key ok lines and warning reports")
+    args = ap.parse_args(argv)
+
+    ops = (tuple(s for s in args.ops.split(",") if s) if args.ops
+           else list_operations())
+    unknown = set(ops) - set(list_operations())
+    if unknown:
+        ap.error(f"unknown op(s) {sorted(unknown)}; registered: "
+                 f"{list_operations()}")
+    bits = tuple(int(b) for b in args.bits.split(",") if b)
+    optimizes = {"on": (True,), "off": (False,),
+                 "both": (True, False)}[args.optimize]
+    return 1 if sweep(ops, bits, optimizes, verbose=args.verbose) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,13 +16,11 @@ Two step flavors:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as PS
 
 from ..configs.base import ModelConfig
 from ..models.transformer import forward

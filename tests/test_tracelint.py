@@ -1,0 +1,453 @@
+"""TraceLint: the static verifier over lowered command traces.
+
+* **clean sweep** — every builtin × 4/8/16/32 bits lints with zero
+  diagnostics (errors *and* warnings);
+* **mutation tests** — corrupt a valid trace (swap a row, drop a command,
+  break the seqs table, ...) and assert the linter rejects it with the
+  right diagnostic ``kind``, naming the command index and human row key;
+* **wiring** — ``compile_trace(..., verify=)`` and ``TraceCache`` reject
+  broken traces and never re-lint cached ones, ``define_op`` rolls back a
+  broken registration, ``BankScheduler.enqueue`` flags cross-tenant bank
+  packing with overlapping row footprints;
+* **fingerprint memos** — the PerfStats cost memos key on the stable trace
+  fingerprint (regression for the recycled-``id()`` aliasing hazard).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.backends import PerfStats
+from repro.core.circuits import (ALL_OPS, compile_operation,
+                                 register_operation, unregister_operation)
+from repro.core.trace import (CMD_COPY, CMD_MAJ, SEQ_AAP_TRA, TraceCache,
+                              compile_trace, lower_program)
+from repro.core.tracelint import (Diagnostic, LintReport, TraceLintError,
+                                  lint_packing, lint_trace, row_footprint)
+from repro.core.uprogram import AAP, DRow, Port, UProgram
+from repro.simdram.machine import SimdramMachine
+from repro.simdram.scheduler import BankScheduler
+
+WIDTHS = (4, 8, 16, 32)
+
+
+def _mutated(trace, **kw):
+    """A structurally independent copy with fresh lint/fingerprint memos."""
+    return dataclasses.replace(
+        trace, cmds=kw.pop("cmds", trace.cmds).copy(),
+        seqs=kw.pop("seqs", trace.seqs).copy(),
+        _decoded=None, _lint=None, _fingerprint=None, **kw)
+
+
+def _trace(name="addition", n_bits=8):
+    return compile_trace(name, n_bits)[1]
+
+
+# ---------------------------------------------------------------------------
+# Clean sweep: every builtin × 4/8/16/32 bits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+def test_builtins_lint_clean(op):
+    for n_bits in WIDTHS:
+        report = _trace(op, n_bits).lint()
+        assert report.ok, report.render()
+        assert not report.diagnostics, report.render()
+
+
+def test_report_surface():
+    report = _trace("relu", 8).lint()
+    assert isinstance(report, LintReport)
+    assert report.name == "relu" and report.n_bits == 8
+    assert report.kinds() == set()
+    assert "0 error(s)" in report.render()
+    # memoized on the trace: same object every time
+    assert _trace("relu", 8).lint() is report
+
+
+# ---------------------------------------------------------------------------
+# Mutation tests: each corruption is caught with the right kind
+# ---------------------------------------------------------------------------
+
+
+def _cell_row(trace, cell):
+    return trace.row_index[("cell", cell)]
+
+
+def test_use_before_init_is_rejected():
+    t = _trace()
+    cmds = t.cmds.copy()
+    # cmd 0 is the first command of the whole trace: nothing has written
+    # any compute cell yet, so re-pointing its src at T3 reads garbage
+    assert cmds[0, 0] == CMD_COPY
+    victim = _cell_row(t, 3)
+    cmds[0, 2] = cmds[0, 3] = victim
+    report = lint_trace(_mutated(t, cmds=cmds))
+    assert not report.ok
+    d = next(d for d in report.diagnostics if d.kind == "use-before-init")
+    assert d.cmd_index == 0 and d.row_key == "T3" and d.severity == "error"
+
+
+def test_operand_clobber_is_rejected():
+    t = _trace()
+    cmds = t.cmds.copy()
+    # retarget the first COPY's dst at a pure-input operand row
+    assert cmds[0, 0] == CMD_COPY
+    cmds[0, 1] = t.row_index[("a", 0)]
+    report = lint_trace(_mutated(t, cmds=cmds))
+    d = next(d for d in report.diagnostics if d.kind == "operand-clobber")
+    assert d.cmd_index == 0 and d.row_key == "a[0]"
+
+
+def test_const_write_is_rejected():
+    t = _trace()
+    cmds = t.cmds.copy()
+    cmds[0, 1] = t.row_index["C0"]
+    report = lint_trace(_mutated(t, cmds=cmds))
+    d = next(d for d in report.diagnostics if d.kind == "const-write")
+    assert d.cmd_index == 0 and d.row_key == "C0"
+
+
+def test_row_bounds_is_rejected():
+    t = _trace()
+    for bad in (t.n_rows + 7, 0, -(t.n_rows + 3)):
+        cmds = t.cmds.copy()
+        cmds[0, 2] = cmds[0, 3] = bad
+        report = lint_trace(_mutated(t, cmds=cmds))
+        d = next(d for d in report.diagnostics if d.kind == "row-bounds")
+        assert d.cmd_index == 0 and d.row == bad
+
+
+def test_bad_neg_port_is_rejected():
+    t = _trace()
+    cmds = t.cmds.copy()
+    # negate a COPY dst that names a T cell (no n-wordline)
+    t0 = _cell_row(t, 0)
+    hits = np.nonzero((cmds[:, 0] == CMD_COPY) & (cmds[:, 1] == t0))[0]
+    assert hits.size, "addition never writes T0?"
+    cmds[hits[0], 1] = -t0
+    report = lint_trace(_mutated(t, cmds=cmds))
+    d = next(d for d in report.diagnostics if d.kind == "bad-neg-port")
+    assert d.cmd_index == int(hits[0]) and d.row_key == "T0"
+
+
+def test_tra_operand_is_rejected():
+    t = _trace()
+    majs = np.nonzero(t.cmds[:, 0] == CMD_MAJ)[0]
+    assert majs.size, "addition has no TRA?"
+    # duplicate port: only two distinct rows activated
+    cmds = t.cmds.copy()
+    cmds[majs[0], 2] = cmds[majs[0], 1]
+    report = lint_trace(_mutated(t, cmds=cmds))
+    assert "tra-operand" in report.kinds()
+    # non-B-group port: TRA cannot decode a D row
+    cmds = t.cmds.copy()
+    cmds[majs[0], 3] = t.row_index[("a", 0)]
+    report = lint_trace(_mutated(t, cmds=cmds))
+    d = next(d for d in report.diagnostics if d.kind == "tra-operand")
+    assert d.cmd_index == int(majs[0]) and d.row_key == "a[0]"
+
+
+def test_dropped_command_is_rejected():
+    t = _trace()
+    report = lint_trace(_mutated(t, cmds=t.cmds[:-1]))
+    assert "malformed-seqs" in report.kinds()
+
+
+def test_broken_seqs_table_is_rejected():
+    t = _trace()
+    # gap: drop the first sequence but keep its commands
+    report = lint_trace(_mutated(t, seqs=t.seqs[1:]))
+    assert "malformed-seqs" in report.kinds()
+    # overlap: second sequence starts before the first ended
+    seqs = t.seqs.copy()
+    seqs[1, 1] -= 1
+    assert "malformed-seqs" in lint_trace(_mutated(t, seqs=seqs)).kinds()
+    # unknown kind
+    seqs = t.seqs.copy()
+    seqs[0, 0] = 7
+    assert "malformed-seqs" in lint_trace(_mutated(t, seqs=seqs)).kinds()
+    # a multi-source AAP (one activation latches one row)
+    t2 = _trace("addition")
+    wide = next(
+        (k, s, e) for k, s, e in t2.seqs.tolist() if k == 0 and e - s >= 2)
+    cmds = t2.cmds.copy()
+    _, s, e = wide
+    cmds[s, 2] = cmds[s, 3] = t2.row_index["C0"]
+    cmds[s + 1, 2] = cmds[s + 1, 3] = t2.row_index["C1"]
+    assert "malformed-seqs" in lint_trace(_mutated(t2, cmds=cmds)).kinds()
+
+
+def test_destroyed_read_in_fused_aap_is_rejected():
+    # abs compiles with Case-2 fused AAPs at 8 bits
+    t = _trace("abs", 8)
+    fused = next((s, e) for k, s, e in t.seqs.tolist() if k == SEQ_AAP_TRA)
+    s, e = fused
+    cmds = t.cmds.copy()
+    # the fused COPY must read one of the three TRA rows — anything else
+    # reads a row whose charge the activation sequence does not define
+    cmds[s + 1, 2] = cmds[s + 1, 3] = t.row_index["C1"]
+    report = lint_trace(_mutated(t, cmds=cmds))
+    d = next(d for d in report.diagnostics if d.kind == "destroyed-read")
+    assert d.cmd_index == s + 1
+
+
+def test_undefined_output_is_rejected():
+    t = _trace()
+    out_row = t.row_index[("out", t.n_bits - 1)]
+    cmds = t.cmds.copy()
+    # divert every write of out[n-1] into a compute cell: the output row
+    # is left undefined at the end of the trace
+    writes = (cmds[:, 0] == CMD_COPY) & (cmds[:, 1] == out_row)
+    assert writes.any()
+    cmds[writes, 1] = _cell_row(t, 0)
+    report = lint_trace(_mutated(t, cmds=cmds))
+    d = next(d for d in report.diagnostics if d.kind == "undefined-output")
+    assert d.row_key == f"out[{t.n_bits - 1}]"
+    assert d.cmd_index == int(t.cmds.shape[0])
+
+
+def test_unknown_opcode_is_rejected():
+    t = _trace()
+    cmds = t.cmds.copy()
+    cmds[0, 0] = 9
+    assert "malformed-cmds" in lint_trace(_mutated(t, cmds=cmds)).kinds()
+
+
+def test_copy_src_dup_warns_but_passes():
+    t = _trace()
+    cmds = t.cmds.copy()
+    i = int(np.nonzero(cmds[:, 0] == CMD_COPY)[0][0])
+    cmds[i, 3] = t.row_index["C1"]          # c no longer duplicates b
+    report = lint_trace(_mutated(t, cmds=cmds))
+    assert report.ok                        # warning, not error
+    assert "copy-src-dup" in report.kinds()
+
+
+# ---------------------------------------------------------------------------
+# Property: swapping an operand row with an output row is always caught
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                          # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sampled_from(("addition", "subtraction", "maximum", "abs")),
+           st.sampled_from((4, 8)), st.data())
+    def test_row_swap_mutation_always_caught(op, n_bits, data):
+        t = _trace(op, n_bits)
+        r_in = t.row_index[("a", data.draw(
+            st.integers(0, n_bits - 1), label="input bit"))]
+        r_out = t.row_index[("out", data.draw(
+            st.integers(0, n_bits - 1), label="output bit"))]
+        cmds = t.cmds.copy()
+        a, b = cmds == r_in, cmds == r_out
+        cmds[a], cmds[b] = r_out, r_in       # swap the two rows throughout
+        report = lint_trace(_mutated(t, cmds=cmds))
+        # the output row's writes now clobber the caller's operand row
+        assert not report.ok
+        assert "operand-clobber" in report.kinds()
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.sampled_from(("relu", "greater", "xor_reduction")),
+           st.data())
+    def test_lint_never_crashes_on_corruption(op, data):
+        t = _trace(op, 8)
+        cmds = t.cmds.copy()
+        i = data.draw(st.integers(0, cmds.shape[0] - 1), label="cmd")
+        j = data.draw(st.integers(0, 3), label="col")
+        cmds[i, j] = data.draw(
+            st.integers(-t.n_rows - 3, t.n_rows + 3), label="value")
+        report = lint_trace(_mutated(t, cmds=cmds))
+        assert isinstance(report, LintReport)
+        for d in report.diagnostics:
+            assert isinstance(d, Diagnostic) and str(d)
+
+
+# ---------------------------------------------------------------------------
+# Wiring: compile_trace / TraceCache
+# ---------------------------------------------------------------------------
+
+
+def _broken_compile_fn(n_bits, optimize=True):
+    """Reads T0 before anything ever wrote it — classic garbage read."""
+    return UProgram(name="broken_op", n_bits=n_bits,
+                    prologue=[AAP(Port(0), (DRow("out", 0, fixed=True),))],
+                    body=[], epilogue=[], body_reps=0,
+                    inputs=("a",), outputs=("out",))
+
+
+def test_compile_trace_rejects_broken_op():
+    register_operation("broken_op", _broken_compile_fn)
+    try:
+        with pytest.raises(TraceLintError) as ei:
+            compile_trace("broken_op", 8)
+        msg = str(ei.value)
+        assert "use-before-init" in msg and "T0" in msg and "cmd 0" in msg
+        assert ei.value.report.errors
+        # the broken trace never entered the cache ...
+        assert ("broken_op", 8, True) not in __import__(
+            "repro.core.trace", fromlist=["GLOBAL_TRACE_CACHE"]
+        ).GLOBAL_TRACE_CACHE
+        # ... verify=False opts out, but a later default fetch of the
+        # cached-unverified entry still raises (memoized report)
+        compile_trace("broken_op", 8, verify=False)
+        with pytest.raises(TraceLintError):
+            compile_trace("broken_op", 8)
+    finally:
+        unregister_operation("broken_op")
+
+
+def test_trace_cache_verify_off_by_construction():
+    cache = TraceCache(compile_fn=lambda n, b, o: _broken_compile_fn(b),
+                       verify=False)
+    prog, trace = cache.get("whatever", 8)
+    assert not trace.lint().ok               # broken, but accepted
+    strict = TraceCache(compile_fn=lambda n, b, o: _broken_compile_fn(b))
+    with pytest.raises(TraceLintError):
+        strict.get("whatever", 8)
+    assert len(strict) == 0
+
+
+# ---------------------------------------------------------------------------
+# Wiring: define_op rejection
+# ---------------------------------------------------------------------------
+
+
+def test_define_op_rejects_broken_user_op():
+    m = SimdramMachine()
+    with pytest.raises(TraceLintError) as ei:
+        m.define_op("broken_op", compile_fn=_broken_compile_fn)
+    assert "T0" in str(ei.value)
+    # rolled back: not registered, not cached, name reusable
+    assert "broken_op" not in m.ops()
+    m.define_op("ident", compile_fn=lambda n, o=True: UProgram(
+        name="ident", n_bits=n,
+        prologue=[AAP(DRow("a", i), (DRow("out", i, fixed=True),))
+                  for i in range(n)],
+        body=[], epilogue=[], body_reps=0, inputs=("a",), outputs=("out",)))
+    assert "ident" in m.ops()
+
+
+def test_define_op_verify_false_skips_probe():
+    m = SimdramMachine()
+    m.define_op("broken_op", compile_fn=_broken_compile_fn, verify=False)
+    assert "broken_op" in m.ops()
+    with pytest.raises(TraceLintError):      # ... but execution still checks
+        m.memory.get("broken_op", 8)
+
+
+# ---------------------------------------------------------------------------
+# Wiring: scheduler bank packing
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_flags_cross_tenant_bank_overlap():
+    _, t_add = compile_trace("addition", 8)
+    sched = BankScheduler(n_banks=4)
+    sched.enqueue(t_add, tenant="A", name="add-A", bank_ids=(0,))
+    assert sched.lint_diagnostics == []      # nothing to overlap with yet
+    sched.enqueue(t_add, tenant="A", name="add-A2", bank_ids=(0,))
+    assert sched.lint_diagnostics == []      # same tenant: not flagged
+    sched.enqueue(t_add, tenant="B", name="add-B", bank_ids=(1,))
+    assert sched.lint_diagnostics == []      # disjoint banks: not flagged
+    sched.enqueue(t_add, tenant="B", name="add-B2", bank_ids=(0,))
+    kinds = {d.kind for d in sched.lint_diagnostics}
+    assert kinds == {"bank-overlap"}
+    assert all(d.severity == "warning" for d in sched.lint_diagnostics)
+    assert any("add-B2" in d.message and "tenant" in d.message
+               for d in sched.lint_diagnostics)
+    # warnings never reject the request
+    assert sched.n_pending > 0
+    sched.run()
+    # a new busy period pairs afresh
+    sched.enqueue(t_add, tenant="C", name="add-C", bank_ids=(0,))
+    assert {d.kind for d in sched.lint_diagnostics} == {"bank-overlap"}
+    assert not any("add-C" in d.message for d in sched.lint_diagnostics)
+
+
+def test_scheduler_rejects_broken_trace():
+    t = _trace()
+    broken = _mutated(t, cmds=t.cmds[:-1])
+    sched = BankScheduler(n_banks=2)
+    with pytest.raises(TraceLintError):
+        sched.enqueue(broken)
+    assert sched.n_pending == 0
+    BankScheduler(n_banks=2, verify=False).enqueue(broken)  # opt-out
+
+
+def test_lint_packing_pure_function():
+    fp1 = row_footprint(_trace("addition", 8))
+    fp2 = row_footprint(_trace("relu", 8))
+    assert ("a", 0) in fp1 and ("out", 0) in fp1
+    out = lint_packing([("r0", "A", fp1, {0}), ("r1", "B", fp1, {0, 1}),
+                        ("r2", "B", fp2 - fp1, {0})])
+    assert len(out) == 1 and out[0].kind == "bank-overlap"
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint-keyed cost memos (regression: recycled-id aliasing)
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_across_objects():
+    prog1 = compile_operation("addition", 8)
+    prog2 = compile_operation("addition", 8)
+    t1, t2 = lower_program(prog1), lower_program(prog2)
+    assert t1 is not t2
+    assert t1.fingerprint == t2.fingerprint
+    assert t1.fingerprint != lower_program(
+        compile_operation("relu", 8)).fingerprint
+    mutated = _mutated(t1)
+    mutated.cmds[0, 2] += 1
+    assert mutated.fingerprint != t1.fingerprint
+
+
+def test_cost_memos_key_on_fingerprint_not_id():
+    prog1 = compile_operation("addition", 8)
+    prog2 = compile_operation("addition", 8)
+    t1, t2 = lower_program(prog1), lower_program(prog2)
+    st = PerfStats(mode="replay")
+    st.charge_program(prog1, 1, 32, trace=t1)
+    st.charge_program(prog2, 1, 32, trace=t2)   # distinct object, same trace
+    # content-keyed: equal traces share one entry, so a recycled id() can
+    # never serve another program's cost
+    assert set(st._prog_costs) == {t1.fingerprint}
+    assert [k[0] for k in st._replay_costs] == [t1.fingerprint]
+    assert st.n_programs == 2                    # charging itself: per call
+    other = lower_program(compile_operation("relu", 8))
+    st.charge_program(compile_operation("relu", 8), 1, 32, trace=other)
+    assert len(st._prog_costs) == 2
+
+
+def test_charge_program_without_trace_uses_lowering_memo():
+    prog = compile_operation("relu", 8)
+    st = PerfStats()
+    st.charge_program(prog, 1, 32)               # trace=None: analytic-only
+    assert set(st._prog_costs) == {lower_program(prog).fingerprint}
+    assert st.replay_ns == 0.0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_sweep_clean_and_failing(capsys):
+    from repro.tools.tracelint import main
+    assert main(["--ops", "relu,greater", "--bits", "4,8", "-v"]) == 0
+    out = capsys.readouterr().out
+    assert "0 failing" in out and "ok    relu/4b" in out
+    register_operation("broken_op", _broken_compile_fn)
+    try:
+        assert main(["--ops", "broken_op", "--bits", "8"]) == 1
+        out = capsys.readouterr().out
+        assert "FAIL  broken_op/8b" in out and "use-before-init" in out
+    finally:
+        unregister_operation("broken_op")
