@@ -66,6 +66,12 @@ def bad_gate_rows(text: str) -> list[str]:
       aborted mid-sequence refreshes; pausing between sequences cannot be
       slower).  Both members of every present pair must be finite and
       non-zero.
+    * the vectorized replay engine gates: ``vector_parity_delta_ns=`` must
+      be exactly zero (the closed form is exact-or-absent — any non-zero
+      delta means it disagreed with the stepped FSM oracle instead of
+      declining), and ``vector_speedup=`` must be finite and >= 100 (the
+      memoized warm replay path must actually short-circuit the per-edge
+      stepping).
     """
     # (slower_key, faster_key, why) — slower >= faster, both finite > 0
     orderings = (
@@ -98,6 +104,19 @@ def bad_gate_rows(text: str) -> list[str]:
             if r is None or not math.isfinite(r) or r <= 0:
                 bad.append(f"cache_hit_rate={kv['cache_hit_rate']} "
                            f"(must be > 0) in: {line}")
+        if "vector_parity_delta_ns" in kv:
+            d = num("vector_parity_delta_ns")
+            if d is None or not math.isfinite(d) or d != 0:
+                bad.append(f"vector_parity_delta_ns="
+                           f"{kv['vector_parity_delta_ns']} (vectorized "
+                           f"replay must match the stepped FSM exactly "
+                           f"or decline) in: {line}")
+        if "vector_speedup" in kv:
+            s = num("vector_speedup")
+            if s is None or not math.isfinite(s) or s < 100:
+                bad.append(f"vector_speedup={kv['vector_speedup']} (warm "
+                           f"memoized vectorized replay must be >= 100x "
+                           f"the stepped FSM) in: {line}")
         for slow_key, fast_key, why in orderings:
             if slow_key not in kv or fast_key not in kv:
                 continue

@@ -18,6 +18,16 @@ of printing garbage.
 row with its key=value pairs decoded, per-bench pass/fail, and the gate
 diagnostics) as one JSON document — the persisted benchmark artifact the
 nightly job uploads, so runs are diffable without re-parsing CSV text.
+
+``--compare BASELINE.json`` diffs this run against a pinned artifact
+(``benchmarks/artifacts/BENCH_*.json``) and exits non-zero on regressions:
+deterministic modeled keys (``*gops*``, ``hit_rate``) past the percentage
+tolerance (default 5%), and warm-path wall keys (``*speedup*`` higher-
+better, ``*warm_us`` lower-better) past a wide multiplicative guard that
+absorbs shared-runner noise but still fires when a memo path stops
+short-circuiting.  Rows or keys present on only one side are skipped — the
+comparison gates drift on the surface both runs share, it does not freeze
+the row set.
 """
 from __future__ import annotations
 
@@ -25,6 +35,7 @@ import argparse
 import contextlib
 import io
 import json
+import math
 import re
 import sys
 import traceback
@@ -77,6 +88,81 @@ def parse_rows(text: str) -> list[dict]:
     return rows
 
 
+# --compare key classes.  Modeled rates (deterministic functions of the
+# code, bit-identical across runs) are held to the tight percentage
+# tolerance; memoized warm-path wall keys (speedups and *warm_us) are real
+# clocks that swing severalfold run-to-run on a shared host, so they get a
+# wide multiplicative guard instead — still a hard non-zero exit when a
+# memo path stops short-circuiting (those regress by orders of magnitude,
+# e.g. a dead replay memo drops vector_speedup from ~1000x to ~1x).  Raw
+# cold/one-shot wall clocks (us_per_call, stepped_us, cold_us, ...) are
+# deliberately not matched — they measure the host, not the model or the
+# memo hot path.
+_MODEL_HIGHER = re.compile(r"gops|hit_rate")
+_WALL_HIGHER = re.compile(r"speedup")
+_WALL_LOWER = re.compile(r"warm_us$")
+
+
+def _artifact_rows(payload: dict) -> dict[str, dict]:
+    """Flatten an artifact's benches to ``{row_name: derived_kv}``."""
+    rows: dict[str, dict] = {}
+    for bench in payload.get("benches", {}).values():
+        for r in bench.get("rows", []):
+            rows[r["name"]] = r.get("derived", {})
+    return rows
+
+
+def compare_artifacts(baseline: dict, current: dict,
+                      tolerance: float = 0.05,
+                      wall_factor: float = 4.0) -> list[str]:
+    """Regressions of ``current`` vs ``baseline``.
+
+    Only rows and derived keys present in *both* artifacts are compared.
+    Deterministic modeled keys (throughput, hit rates) fail when the new
+    value falls below ``old / (1 + tolerance)``; noisy warm-path wall keys
+    fail only past ``wall_factor`` (speedups that collapse below
+    ``old / wall_factor``, warm timings that blow past
+    ``old * wall_factor``)."""
+    base_rows = _artifact_rows(baseline)
+    regressions = []
+
+    def as_float(v):
+        if isinstance(v, str):
+            try:
+                v = float(v.rstrip("x"))
+            except ValueError:
+                return None
+        return float(v)
+
+    for name, cur_kv in sorted(_artifact_rows(current).items()):
+        old_kv = base_rows.get(name)
+        if old_kv is None:
+            continue
+        for key, cur_raw in cur_kv.items():
+            if key not in old_kv:
+                continue
+            old, cur = as_float(old_kv[key]), as_float(cur_raw)
+            if (old is None or cur is None or not math.isfinite(old)
+                    or not math.isfinite(cur) or old <= 0):
+                continue
+            if _MODEL_HIGHER.search(key) and not _WALL_HIGHER.search(key):
+                if cur < old / (1 + tolerance):
+                    regressions.append(
+                        f"{name}: {key} fell {old:g} -> {cur:g} "
+                        f"({cur / old - 1:+.1%}, tolerance {tolerance:.0%})")
+            elif _WALL_HIGHER.search(key):
+                if cur < old / wall_factor:
+                    regressions.append(
+                        f"{name}: {key} collapsed {old:g} -> {cur:g} "
+                        f"(past the {wall_factor:g}x wall-clock guard)")
+            elif _WALL_LOWER.search(key):
+                if cur > old * wall_factor:
+                    regressions.append(
+                        f"{name}: {key} blew up {old:g} -> {cur:g} "
+                        f"(past the {wall_factor:g}x wall-clock guard)")
+    return regressions
+
+
 class _Tee(io.TextIOBase):
     def __init__(self, *streams):
         self.streams = streams
@@ -100,10 +186,21 @@ def main() -> None:
     ap.add_argument("--artifact", default=None, metavar="PATH",
                     help="write parsed results (rows, gate diagnostics, "
                          "per-bench status) to PATH as JSON")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="diff this run against a pinned benchmark artifact "
+                         "and exit non-zero on warm-path regressions beyond "
+                         "--tolerance")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative regression tolerance for deterministic "
+                         "modeled keys under --compare (default 0.05 = 5%%)")
+    ap.add_argument("--wall-factor", type=float, default=4.0,
+                    help="multiplicative guard for noisy warm-path wall "
+                         "keys under --compare (default 4.0)")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only
              else list(SMOKE) if args.smoke else list(BENCHES))
-    capture = args.smoke or args.artifact is not None
+    capture = (args.smoke or args.artifact is not None
+               or args.compare is not None)
     failed = []
     benches: dict[str, dict] = {}
     for name in names:
@@ -137,13 +234,27 @@ def main() -> None:
                 record["ok"] = False
                 record["gate_errors"] = bad
                 failed.append(name)
+    payload = {"argv": sys.argv[1:], "smoke": args.smoke,
+               "failed": failed, "benches": benches}
     if args.artifact:
-        payload = {"argv": sys.argv[1:], "smoke": args.smoke,
-                   "failed": failed, "benches": benches}
         with open(args.artifact, "w") as fh:
             json.dump(payload, fh, indent=1, sort_keys=True)
             fh.write("\n")
         print(f"\nwrote benchmark artifact: {args.artifact}")
+    if args.compare:
+        with open(args.compare) as fh:
+            baseline = json.load(fh)
+        regressions = compare_artifacts(baseline, payload,
+                                        tolerance=args.tolerance,
+                                        wall_factor=args.wall_factor)
+        if regressions:
+            print(f"\nREGRESSIONS vs {args.compare}:", file=sys.stderr)
+            for r in regressions:
+                print(f"  {r}", file=sys.stderr)
+            failed.append(f"compare:{args.compare}")
+        else:
+            print(f"\nno regressions vs {args.compare} "
+                  f"(tolerance {args.tolerance:.0%})")
     if failed:
         print(f"\nFAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -56,6 +56,16 @@ CMD_COPY, CMD_MAJ = 0, 1
 # command-sequence kinds
 SEQ_AAP, SEQ_AP, SEQ_AAP_TRA = 0, 1, 2
 
+# per-ACT gap-kind codes (see :meth:`LoweredTrace.act_structure`) — the
+# timing-independent skeleton the vectorized replay engine compiles each
+# trace to.  Code k tells how the k-th activation follows its predecessor
+# on the same bank: the stream's first ACT has no predecessor (START), the
+# back-to-back second ACT of an AAP issues tRAS later (RAS), and the first
+# ACT of every later sequence issues tRC after the previous sequence's
+# final ACT (RC).  The replay engine maps codes to cycle counts for its
+# own DRAMTiming, so one compiled structure serves every timing.
+ACT_GAP_START, ACT_GAP_RAS, ACT_GAP_RC = 0, 1, 2
+
 
 # ---------------------------------------------------------------------------
 # Encoding
@@ -147,6 +157,7 @@ class LoweredTrace:
     _decoded: object = dataclasses.field(default=None, repr=False)
     _lint: object = dataclasses.field(default=None, repr=False)
     _fingerprint: object = dataclasses.field(default=None, repr=False)
+    _act_struct: object = dataclasses.field(default=None, repr=False)
 
     @property
     def n_rows(self) -> int:
@@ -166,6 +177,32 @@ class LoweredTrace:
             h.update(np.ascontiguousarray(self.seqs, np.int32).tobytes())
             self._fingerprint = h.hexdigest()
         return self._fingerprint
+
+    def act_structure(self) -> np.ndarray:
+        """The trace's per-ACT gap-kind codes (int8[n_acts]) — its compiled
+        replay structure.
+
+        Every command sequence issues a fixed activation pattern (AP: one
+        TRA; AAP: source ACT then back-to-back destination ACT), so the
+        whole trace flattens to one per-bank ACT stream whose inter-ACT
+        gaps depend only on the sequence kinds: ``ACT_GAP_START`` /
+        ``ACT_GAP_RAS`` / ``ACT_GAP_RC``.  The vectorized replay engine
+        turns these codes into cycle vectors and solves the stall
+        recurrences with prefix scans instead of stepping the FSM.
+        Timing-independent, hence memoized here on the trace (one
+        structure serves every DRAMTiming and bank count)."""
+        if self._act_struct is None:
+            kinds = self.seqs[:, 0]
+            if kinds.size == 0:
+                self._act_struct = np.zeros(0, np.int8)
+                return self._act_struct
+            acts_per_seq = np.where(kinds == SEQ_AP, 1, 2)
+            starts = np.concatenate(([0], np.cumsum(acts_per_seq)[:-1]))
+            codes = np.full(int(acts_per_seq.sum()), ACT_GAP_RAS, np.int8)
+            codes[starts] = ACT_GAP_RC
+            codes[0] = ACT_GAP_START
+            self._act_struct = codes
+        return self._act_struct
 
     def lint(self, max_diagnostics: int = 100):
         """Statically verify this trace (see :mod:`repro.core.tracelint`);
@@ -334,18 +371,34 @@ class TraceCache:
     """
 
     def __init__(self, capacity: int | None = None, compile_fn=None,
-                 verify: bool = True) -> None:
+                 verify: bool = True,
+                 replay_capacity: int | None = 512) -> None:
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        if replay_capacity is not None and replay_capacity < 1:
+            raise ValueError(f"replay_capacity must be >= 1 or None, "
+                             f"got {replay_capacity}")
         self.capacity = capacity
         self.verify = verify
         self._compile_fn = compile_fn
         self._entries: collections.OrderedDict[
             tuple, tuple[UProgram, LoweredTrace]] = collections.OrderedDict()
+        # closed-form ReplayResult memo (the μProgram Memory's second
+        # table): keyed by (trace.fingerprint, banks, offsets signature,
+        # refresh-phase bucket, policy/engine, timing signature) — content
+        # hashes, so entries never go stale across recompiles and need no
+        # invalidate() hook.  LRU-bounded separately from the compile
+        # entries: replay keys fan out per (banks, offsets, phase) and
+        # must not evict compiled programs.
+        self._replays: collections.OrderedDict[tuple, object] = \
+            collections.OrderedDict()
+        self.replay_capacity = replay_capacity
         self._lock = threading.RLock()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        self._replay_hits = 0
+        self._replay_misses = 0
         _ALL_CACHES.add(self)
 
     def _compile(self, name: str, n_bits: int, optimize: bool) -> UProgram:
@@ -389,6 +442,26 @@ class TraceCache:
                 self._evictions += 1
             return entry
 
+    def replay_get(self, key: tuple):
+        """Fetch a memoized closed-form ReplayResult (None on miss)."""
+        with self._lock:
+            hit = self._replays.get(key)
+            if hit is None:
+                self._replay_misses += 1
+                return None
+            self._replay_hits += 1
+            self._replays.move_to_end(key)
+            return hit
+
+    def replay_put(self, key: tuple, result) -> None:
+        """Memoize one replay outcome under its full stall-structure key."""
+        with self._lock:
+            self._replays[key] = result
+            self._replays.move_to_end(key)
+            while self.replay_capacity is not None and \
+                    len(self._replays) > self.replay_capacity:
+                self._replays.popitem(last=False)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
@@ -398,12 +471,16 @@ class TraceCache:
             return key in self._entries
 
     def stats(self) -> dict:
-        """{hits, misses, entries, hit_rate, capacity, evictions}."""
+        """{hits, misses, entries, hit_rate, capacity, evictions} plus the
+        replay-memo counters (replay_hits, replay_misses, replay_entries)."""
         with self._lock:
             h, m = self._hits, self._misses
             return {"hits": h, "misses": m, "entries": len(self._entries),
                     "hit_rate": h / (h + m) if h + m else 0.0,
-                    "capacity": self.capacity, "evictions": self._evictions}
+                    "capacity": self.capacity, "evictions": self._evictions,
+                    "replay_hits": self._replay_hits,
+                    "replay_misses": self._replay_misses,
+                    "replay_entries": len(self._replays)}
 
     def invalidate(self, name: str) -> int:
         """Drop every cached width/optimize variant of one operation —
@@ -419,11 +496,13 @@ class TraceCache:
     def reset_stats(self) -> None:
         with self._lock:
             self._hits = self._misses = self._evictions = 0
+            self._replay_hits = self._replay_misses = 0
 
     def clear(self) -> None:
         """Drop entries and counters (in place — aliases stay valid)."""
         with self._lock:
             self._entries.clear()
+            self._replays.clear()
             self.reset_stats()
 
 

@@ -56,11 +56,14 @@ def simdram_argmax(values: jax.Array, n_bits: int = 8,
     transposition pass each — they differ in width, so they cannot share a
     pass); each round splits the lane axis in half (free row/lane
     re-indexing) and keeps the winners with one ``bbop_greater`` + two
-    ``bbop_if_else`` — all banks in parallel, zero per-op conversions.  The
-    final ≤32 candidates (one packed word) pay one reverse pass each and
-    are reduced on the host, like a warp-level epilogue: 4 transposition
-    passes total regardless of V or round count.  Ties resolve to an
-    arbitrary maximal index.
+    ``bbop_if_else`` — all banks in parallel, zero per-op conversions.
+    Below one packed word the same tournament continues SWAR-style: the
+    candidates are compared against their lane-shifted selves
+    (:meth:`~repro.simdram.layout.BitplaneArray.shift_lanes`, free word
+    shifts) at strides 16, 8, 4, 2, 1 until lane 0 holds the winner, so
+    only the index planes pay a reverse pass — 3 transposition passes
+    total regardless of V or round count, no host reduction epilogue.
+    Ties resolve to an arbitrary maximal index.
 
     ``perf_stats`` runs the tournament under the timed execution layer,
     accumulating modeled DRAM cost (latency, energy, transposition) into
@@ -87,10 +90,20 @@ def simdram_argmax(values: jax.Array, n_bits: int = 8,
             win = bbop_greater(hi_v, lo_v, n_bits)
             cur_v = bbop_if_else(win, hi_v, lo_v, n_bits)
             cur_i = bbop_if_else(win, hi_i, lo_i, idx_bits)
-        final_v = cur_v.to_values()              # (B, ≤32)
-        final_i = cur_i.to_values()
-    slot = jnp.argmax(final_v, axis=-1)
-    return jnp.take_along_axis(final_i, slot[:, None], -1)[:, 0]
+        # SWAR finish within the last packed word: strict greater keeps
+        # the lower lane on ties, and the zero-filled shifted-in lanes
+        # never beat a live candidate, so lane 0 converges to a maximal
+        # index without leaving the vertical layout
+        k = _MIN_LANES // 2
+        while k:
+            sh_v = cur_v.shift_lanes(k)
+            sh_i = cur_i.shift_lanes(k)
+            win = bbop_greater(sh_v, cur_v, n_bits)
+            cur_v = bbop_if_else(win, sh_v, cur_v, n_bits)
+            cur_i = bbop_if_else(win, sh_i, cur_i, idx_bits)
+            k //= 2
+        final_i = cur_i.to_values()              # (B, 32), winner in lane 0
+    return final_i[:, 0]
 
 
 def simdram_greedy_token(logits: jax.Array, n_bits: int = 8,
@@ -120,8 +133,7 @@ def simdram_greedy_token(logits: jax.Array, n_bits: int = 8,
 def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
                   max_seq: int | None = None, extra_batch: dict | None = None,
                   sampler: str = "host", sampler_backend: str | None = None,
-                  sampler_perf: PerfStats | None = None,
-                  machine=None, sampler_machine=None):
+                  sampler_perf: PerfStats | None = None, machine=None):
     """e2e greedy decoding loop (examples/tests; single host).
 
     ``sampler="simdram"`` offloads greedy token selection to the
@@ -134,18 +146,8 @@ def greedy_decode(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
     μProgram Memory and — absent ``sampler_perf`` — its own accumulator),
     so concurrent decode services with different DRAM configs stay
     isolated; it is the same kwarg every ``bbop_*``/``simdram_*`` entry
-    point takes.  ``sampler_machine`` is a deprecated alias for it.
+    point takes.
     """
-    if sampler_machine is not None:
-        import warnings
-        warnings.warn("sampler_machine= is deprecated; pass machine= "
-                      "(the uniform kwarg across the SIMDRAM op surface)",
-                      DeprecationWarning, stacklevel=2)
-        if machine is None:
-            machine = sampler_machine
-        elif machine is not sampler_machine:
-            raise ValueError("conflicting machine= and sampler_machine= "
-                             "arguments — pass machine= only")
     if sampler == "simdram":
         def pick(logits):
             return simdram_greedy_token(logits, backend=sampler_backend,

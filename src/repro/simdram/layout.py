@@ -257,6 +257,29 @@ class BitplaneArray:
                                  length=min(self.length, half_lanes))
         return lo, hi
 
+    def shift_lanes(self, k: int) -> "BitplaneArray":
+        """Shift the lane axis down by ``k`` (lane ``j`` ← lane ``j + k``),
+        zero-filling the vacated top lanes — free plane-level word shifts,
+        no transposition-unit traffic.
+
+        Lane ``j`` of a plane is bit ``j % 32`` of word ``j // 32``, so a
+        sub-word shift is one logical right-shift per word plus an OR of
+        the carry bits from the next word.  This is the SWAR step of
+        tournament reductions: compare an array against its ``k``-shifted
+        self and the low ``k`` lanes accumulate pairwise winners, all the
+        way down to lane 0 — no host epilogue.  ``length`` is unchanged
+        (the shifted-in lanes are genuine zero values), matching the
+        fully-padded layout tournament pipelines maintain.
+        """
+        if not 0 < k < LANE_WORD:
+            raise ValueError(f"lane shift must be in [1, {LANE_WORD - 1}], "
+                             f"got {k}")
+        p = self.planes
+        carry = jnp.concatenate(
+            [p[..., 1:], jnp.zeros_like(p[..., :1])], axis=-1)
+        planes = (p >> jnp.uint32(k)) | (carry << jnp.uint32(LANE_WORD - k))
+        return dataclasses.replace(self, planes=planes)
+
     def rebank(self, banks: int | None) -> "BitplaneArray":
         """Redistribute the lane axis across DRAM banks (or gather it back).
 

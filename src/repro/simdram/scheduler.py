@@ -33,7 +33,14 @@ conventional DRAM controller front end:
   rank ACT slots), and ``"defer"`` reproduces the replay substrate's
   optimistic mid-sequence deferral exactly — the property-tested
   equivalence anchor (single tenant × identical traces on all banks under
-  ``"defer"`` equals :meth:`TraceReplayTiming.replay` cycle-for-cycle).
+  ``"defer"`` equals :meth:`TraceReplayTiming.replay` cycle-for-cycle,
+  whichever ``replay_engine`` the timing selects: the engines are
+  cycle-identical, so the anchor is engine-independent).
+
+The event loop here always steps: an interleaved multi-trace schedule has
+no per-trace closed form to memoize, unlike the single-trace replays the
+vectorized engine (``DRAMTiming(replay_engine="vectorized")``) compiles
+and the :class:`~repro.core.trace.TraceCache` replay memo serves warm.
 
 The scheduler is a pure timing model: it consumes lowered traces and
 produces a :class:`ScheduleResult` (makespan, per-request

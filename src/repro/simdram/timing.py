@@ -18,7 +18,9 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from ..core.trace import SEQ_AP
+import numpy as np
+
+from ..core.trace import ACT_GAP_RAS, ACT_GAP_RC, ACT_GAP_START, SEQ_AP
 from ..core.uprogram import UProgram
 
 
@@ -36,6 +38,13 @@ class DRAMTiming:
     ``"desync"`` (default) replays one FSM per bank with the rank windows
     coupling them; ``"lockstep"`` replays the legacy single broadcast FSM
     that assumes banks mirror each other for free (no tRRD/tFAW).
+
+    ``replay_engine`` selects how traces replay: ``"vectorized"``
+    (default) compiles each trace's stall structure to arrays and solves
+    the timing recurrences with prefix scans, falling back to the FSM for
+    the configurations it cannot prove exact; ``"stepped"`` always steps
+    the per-edge FSM (the oracle).  Both produce cycle-identical
+    :class:`ReplayResult`\\ s.
     """
     tCK_ns: float = 0.833
     tRCD_ns: float = 14.16
@@ -49,6 +58,7 @@ class DRAMTiming:
     tREFI_ns: float = 7812.5              # avg refresh interval (64 ms / 8192)
     tRFC_ns: float = 350.0                # refresh cycle time (8 Gb die)
     desync_policy: str = "desync"         # "desync" | "lockstep"
+    replay_engine: str = "vectorized"     # "vectorized" | "stepped"
 
     # command-sequence latencies (Ambit/RowClone command structure):
     #   AP  = ACTIVATE(triple) → PRECHARGE                = tRAS + tRP
@@ -325,7 +335,31 @@ class TraceReplayTiming:
     analytic sum on every policy.  ``desync_policy="lockstep"`` restores
     the legacy broadcast model (one FSM replays for all banks, no
     tRRD/tFAW coupling) for A/B comparison.
+
+    Two engines produce the same cycle-exact result.  ``"stepped"`` is
+    the per-edge FSM above, the oracle.  ``"vectorized"`` (the default)
+    compiles the trace's activation skeleton once
+    (:meth:`~repro.core.trace.LoweredTrace.act_structure`) and solves the
+    per-bank ready chains, the tRRD/tFAW rank windows and the tREFI/tRFC
+    refresh grid as a monotone fixpoint over cycle arrays — cummax prefix
+    scans for the chain/rank closures, a pointwise jump for refresh —
+    then reconstructs the stall attribution from the converged schedule.
+    The rank-level arbitration order is itself solved as an outer
+    fixpoint (solve times under a candidate order, re-sort by local
+    readiness, repeat until stable) and *verified* against the FSM's
+    arbitration rule on the converged schedule; the few configurations
+    the solver cannot prove (``tRRD=0`` with ``tFAW`` active across
+    desynchronized banks, or a non-converging fixpoint) transparently
+    fall back to the stepped FSM, so the engine choice is never visible
+    in results.
     """
+
+    # fixpoint-iteration headroom beyond the refresh-window estimate; the
+    # solver falls back to the stepped oracle if it fails to converge
+    _BASE_ITERS = 64
+    # rank-coupled order resolution is sequential per refresh window, so
+    # schedules crossing more windows than this are cheaper to step
+    _MAX_WINDOWS = 16
 
     def __init__(self, timing: DRAMTiming | None = None) -> None:
         self.timing = timing or DRAMTiming()
@@ -346,6 +380,14 @@ class TraceReplayTiming:
         if t.desync_policy not in ("desync", "lockstep"):
             raise ValueError(f"unknown desync policy {t.desync_policy!r} "
                              "(expected 'desync' or 'lockstep')")
+        if t.replay_engine not in ("vectorized", "stepped"):
+            raise ValueError(f"unknown replay engine {t.replay_engine!r} "
+                             "(expected 'vectorized' or 'stepped')")
+        # every scalar a ReplayResult depends on besides the trace/banks/
+        # offsets/phase — the timing part of the TraceCache memo key (the
+        # analytic baseline uses the raw ns values, hence both forms)
+        self._sig = (tck, t.tRAS_ns, t.tRP_ns, self.c_rrd, self.c_faw,
+                     self.c_refi, self.c_rfc)
 
     def _rank(self, coupled: bool, phase: int = 0) -> _RankState:
         return _RankState(self.c_rrd if coupled else 0,
@@ -353,8 +395,8 @@ class TraceReplayTiming:
                           self.c_refi, self.c_rfc, phase=phase)
 
     def replay(self, trace, banks: int = 1, offsets_ns=None,
-               policy: str | None = None,
-               refresh_phase_ns: float = 0.0) -> ReplayResult:
+               policy: str | None = None, refresh_phase_ns: float = 0.0,
+               engine: str | None = None, cache=None) -> ReplayResult:
         """Replay ``trace`` on ``banks`` per-bank FSMs.
 
         ``offsets_ns`` optionally gives each bank's issue offset (bank *k*'s
@@ -366,14 +408,22 @@ class TraceReplayTiming:
         a replay-mode :class:`~repro.core.backends.PerfStats` built with
         ``refresh_phase=True`` threads its accumulated pipeline clock
         through here instead, so refresh bites across op boundaries.
+
+        ``engine`` overrides the timing's ``replay_engine`` for this call;
+        ``cache`` optionally names a :class:`~repro.core.trace.TraceCache`
+        whose replay memo serves warm replays as a table lookup, keyed by
+        ``(trace.fingerprint, banks, offsets, refresh-phase bucket,
+        policy, engine, timing signature)``.
         """
         policy = policy or self.timing.desync_policy
         if policy not in ("desync", "lockstep"):
             raise ValueError(f"unknown desync policy {policy!r}")
+        engine = engine or self.timing.replay_engine
+        if engine not in ("vectorized", "stepped"):
+            raise ValueError(f"unknown replay engine {engine!r}")
         banks = max(1, int(banks))
-        kinds = trace.seqs[:, 0].tolist()
         tck = self.timing.tCK_ns
-        if not kinds:
+        if trace.seqs.shape[0] == 0:
             return ReplayResult(ns=0.0, stall_ns=0.0, cycles=0, n_seqs=0,
                                 n_acts=0, banks=banks)
         if offsets_ns is not None and len(offsets_ns) != banks:
@@ -387,11 +437,35 @@ class TraceReplayTiming:
         else:
             offsets = [0] * banks if offsets_ns is None else \
                 [math.ceil(o / tck) for o in offsets_ns]
-        n_banks = len(offsets)
-        phase = 0
+        ref_phase = 0
         if self.c_refi and refresh_phase_ns:
-            phase = math.ceil(refresh_phase_ns / tck) % self.c_refi
-        rank = self._rank(coupled=not lockstep, phase=phase)
+            ref_phase = math.ceil(refresh_phase_ns / tck) % self.c_refi
+        key = None
+        if cache is not None:
+            key = (trace.fingerprint, banks, tuple(offsets), ref_phase,
+                   policy, engine, self._sig)
+            hit = cache.replay_get(key)
+            if hit is not None:
+                return hit
+        res = None
+        if engine == "vectorized":
+            res = self._replay_vectorized(trace, banks, offsets, lockstep,
+                                          ref_phase)
+        if res is None:
+            res = self._replay_stepped(trace, banks, offsets, lockstep,
+                                       ref_phase)
+        if key is not None:
+            cache.replay_put(key, res)
+        return res
+
+    # -- stepped engine: the per-edge FSM oracle -----------------------------
+
+    def _replay_stepped(self, trace, banks: int, offsets: list,
+                        lockstep: bool, ref_phase: int) -> ReplayResult:
+        kinds = trace.seqs[:, 0].tolist()
+        tck = self.timing.tCK_ns
+        n_banks = len(offsets)
+        rank = self._rank(coupled=not lockstep, phase=ref_phase)
         c_ras, c_rp, c_rc = self.c_ras, self.c_rp, self.c_rc
         n_seq = len(kinds)
         # per-bank FSM state (the bank powers up idle and precharged)
@@ -433,19 +507,270 @@ class TraceReplayTiming:
                     # the final precharge must complete before the op retires
                     finish[k] = pre + c_rp
                     pending -= 1
-        cycles = max(finish)
-        min_cycles = min(finish)      # lockstep: one timeline, min == max
+        return self._package(trace, banks, lockstep, max(finish),
+                             min(finish), n_acts * (banks if lockstep else 1),
+                             rank.tfaw_stall, rank.refresh_stall,
+                             rank.n_refresh_stalls)
+
+    # -- vectorized engine: prefix-scan fixpoint over cycle arrays -----------
+
+    def _refresh_jump(self, t: np.ndarray, ref_phase: int) -> np.ndarray:
+        """Vectorized :meth:`_RankState.constrain_refresh`: every element
+        inside a refresh window jumps to that window's end (the least
+        stable cycle ≥ t), elements outside pass through unchanged."""
+        if not self.c_refi:
+            return t
+        ta = t + ref_phase
+        k = ta // self.c_refi
+        in_win = (((k >= 1) | (ref_phase > 0))
+                  & (ta < k * self.c_refi + self.c_rfc))
+        return np.where(in_win, k * self.c_refi + self.c_rfc - ref_phase, t)
+
+    def _iter_cap(self, horizon: int) -> int:
+        """Fixpoint-iteration budget: each sweep resolves at least the
+        earliest unresolved refresh-window crossing, so the window count
+        over the (stall-inflated) schedule horizon bounds the iterations
+        needed; headroom on top, and the caller falls back to the stepped
+        oracle if the budget is ever exhausted."""
+        if not self.c_refi:
+            return self._BASE_ITERS
+        slack = max(1, self.c_refi - self.c_rfc)
+        return self._BASE_ITERS + 4 * (int(horizon) // slack + 1)
+
+    def _solve_chains(self, gaps: np.ndarray, offs: np.ndarray,
+                      ref_phase: int):
+        """Exact schedule for rank-uncoupled streams (no tRRD/tFAW): each
+        bank is an independent ready chain ``r_i = jump(r_{i-1} + g_i)``,
+        solved for all banks at once by alternating the refresh jump with
+        a cummax chain closure until fixpoint.  Returns ``(R, tfaw=0,
+        refresh_stall, n_refresh)`` with R of shape (banks, n_acts), or
+        None if the iteration budget runs out."""
+        cum = np.cumsum(gaps)
+        base = offs[:, None] + cum[None, :]
+        R = base
+        for _ in range(self._iter_cap(int(base.max()))):
+            j = self._refresh_jump(R, ref_phase)
+            nxt = np.maximum.accumulate(j - cum[None, :], axis=1) \
+                + cum[None, :]
+            if np.array_equal(nxt, R):
+                break
+            R = nxt
+        else:
+            return None
+        # stall attribution: re-derive each ACT's pre-refresh candidate
+        # from its predecessor and meter the jumps, as the FSM does
+        cand = np.empty_like(R)
+        cand[:, 0] = offs
+        cand[:, 1:] = R[:, :-1] + gaps[1:][None, :]
+        j = self._refresh_jump(cand, ref_phase)
+        if not np.array_equal(j, R):
+            return None
+        return R, 0, int((j - cand).sum()), int((j > cand).sum())
+
+    def _solve_coupled(self, gaps: np.ndarray, offs: np.ndarray,
+                       ref_phase: int, rrd: int, faw: int):
+        """Exact schedule for rank-coupled per-bank streams.
+
+        The FSM arbitrates by *local* readiness: the next ACT issued is
+        the head with the least per-bank ready time (ties to the lowest
+        bank).  Per-bank ready times are nondecreasing along each bank's
+        own stream, so that arbitration order is exactly the k-way merge
+        of the per-bank ready chains — i.e. the lexicographic sort of
+        ``(ready, bank, position)``.  Along a *known* issue order π the
+        issue times are the least fixpoint of monotone constraints
+
+            r_{π(n)} = jump(max(l_{π(n)}, r_{π(n-1)} + tRRD,
+                                r_{π(n-4)} + tFAW))
+
+        (``l`` the per-bank gap chain, ``jump`` the refresh deferral),
+        solved by Kleene-iterating four cummax/pointwise closures: the
+        tRRD chain (one prefix cummax over the permuted order), the tFAW
+        chain (four strided cummaxes, one per ``n mod 4`` residue), the
+        refresh jump, and the per-bank gap chains.  The order itself is
+        the outer fixpoint: solve under a candidate π, re-derive the
+        ready times, re-sort; when the sort reproduces π, the candidate
+        provably equals the FSM's arbitration and the times are exact.
+        Each round certifies at least one more position of the final
+        order (the common prefix of candidate and re-sort, plus the
+        divergence point itself, is already the FSM's order), so the
+        loop converges — but refresh windows must be order-resolved
+        front to back, so the round count scales with the number of
+        windows the schedule crosses.  Refresh-dominated schedules
+        (``> _MAX_WINDOWS`` windows), a non-converging fixpoint, or an
+        exhausted budget return None and the caller steps the oracle —
+        this path is exact-or-absent, never approximate.  Returns
+        ``(R, tfaw_stall, refresh_stall, n_refresh)`` with R of shape
+        (n_acts, banks)."""
+        a = len(gaps)
+        b = len(offs)
+        n = a * b
+        cum = np.cumsum(gaps)
+        base = offs[None, :] + cum[:, None]                    # (a, b)
+        idx = np.arange(n, dtype=np.int64)
+        k_flat = idx % b
+        i_flat = idx // b
+        rrd_ramp = idx * rrd
+        faw_ramp = np.arange((n + 3) // 4, dtype=np.int64) * faw
+        # the schedule horizon includes the rank serializers: n ACTs
+        # cannot issue faster than one per tRRD nor four per tFAW
+        horizon = int(base.max())
+        if rrd:
+            horizon = max(horizon, n * rrd)
+        if faw:
+            horizon = max(horizon, ((n + 3) // 4) * faw)
+        windows = 0
+        if self.c_refi:
+            windows = horizon // max(1, self.c_refi - self.c_rfc) + 1
+            if windows > self._MAX_WINDOWS:
+                return None
+        # chain↔window alternation can propagate as slowly as a few
+        # positions per sweep, so the sweep budget scales with n; a sweep
+        # costs about as much as stepping two ACTs, so the worst wasted
+        # attempt stays well under one stepped replay.  The budget is
+        # global across order rounds — prefix freezing (below) makes the
+        # total suffix work amortize to roughly one full solve.
+        budget = max(self._BASE_ITERS + 4 * windows, n // 4)
+        outer_cap = 32 + 4 * windows
+
+        def local_ready(r):
+            ready = np.empty_like(r)
+            ready[0, :] = offs
+            ready[1:, :] = r[:-1, :] + gaps[1:, None]
+            return ready
+
+        def order_of(r):
+            # arbitration order: by per-bank ready time, ties to the
+            # lowest bank, then stream position (same-bank "ties" are
+            # just the bank's own program order)
+            return np.lexsort((i_flat, k_flat,
+                               local_ready(r).reshape(-1)))
+
+        def solve(perm, r):
+            # Kleene iteration from below: each sweep applies the four
+            # monotone closures once; a sweep that changes nothing means
+            # the least fixpoint under this order has been reached
+            nonlocal budget
+            while budget > 0:
+                budget -= 1
+                prev = r
+                flat = r.reshape(-1)[perm]
+                if rrd:
+                    flat = np.maximum.accumulate(flat - rrd_ramp) + rrd_ramp
+                if faw:
+                    for rho in range(min(4, n)):
+                        s = flat[rho::4]
+                        ramp = faw_ramp[:len(s)]
+                        flat[rho::4] = np.maximum.accumulate(s - ramp) + ramp
+                flat = self._refresh_jump(flat, ref_phase)
+                nxt = np.empty(n, np.int64)
+                nxt[perm] = flat
+                r = nxt.reshape(a, b)
+                r = np.maximum.accumulate(r - cum[:, None], axis=0) \
+                    + cum[:, None]
+                if np.array_equal(r, prev):
+                    return r
+            return None
+
+        perm = order_of(base)
+        r0 = base
+        for j in range(outer_cap):         # outer: the issue-order fixpoint
+            r = solve(perm, r0)
+            if r is None:
+                return None
+            nperm = order_of(r)
+            neq = np.nonzero(nperm != perm)[0]
+            if neq.size == 0:
+                break
+            # the common prefix of the candidate and the re-derived order
+            # already matches the FSM's arbitration, so those issue times
+            # are final: freeze them and re-solve only the suffix from
+            # below under the corrected order (the divergence point
+            # itself is also certified, so each round makes progress)
+            d = int(neq[0])
+            if j >= 8 and d * outer_cap < n * (j + 1):
+                # projecting the certified-prefix growth rate to the round
+                # cap falls short of n — e.g. scrambled issue offsets that
+                # deviate from every candidate roughly once per bank-round
+                # — so bail out before burning the whole sweep budget
+                return None
+            perm = nperm
+            r0 = base.copy()
+            r0.reshape(-1)[perm[:d]] = r.reshape(-1)[perm[:d]]
+        else:
+            return None
+        # stall attribution along the verified issue order, mirroring the
+        # FSM's metering: the tFAW deferral is measured after the tRRD
+        # floor, refresh jumps are measured last.  The tFAW gate reads the
+        # 4th-latest issued ACT, which is position n-4 only on a monotone
+        # schedule — guaranteed by the tRRD chain, verified anyway.
+        flat_r = r.reshape(-1)[perm]
+        if np.any(np.diff(flat_r) < 0):
+            return None
+        t = local_ready(r).reshape(-1)[perm]
+        if rrd:
+            t[1:] = np.maximum(t[1:], flat_r[:-1] + rrd)
+        tfaw_stall = 0
+        if faw and n > 4:
+            gate = flat_r[:-4] + faw
+            tfaw_stall = int(np.maximum(gate - t[4:], 0).sum())
+            t[4:] = np.maximum(t[4:], gate)
+        j = self._refresh_jump(t, ref_phase)
+        if not np.array_equal(j, flat_r):
+            return None
+        return r, tfaw_stall, int((j - t).sum()), int((j > t).sum())
+
+    def _replay_vectorized(self, trace, banks: int, offsets: list,
+                           lockstep: bool, ref_phase: int
+                           ) -> ReplayResult | None:
+        """Closed-form replay of ``trace``; None where only the stepped
+        oracle is exact (the dispatcher falls back)."""
+        codes = trace.act_structure()
+        a = len(codes)
+        gap_of = np.zeros(3, np.int64)
+        gap_of[ACT_GAP_START] = 0
+        gap_of[ACT_GAP_RAS] = self.c_ras
+        gap_of[ACT_GAP_RC] = self.c_rc
+        gaps = gap_of[codes]
+        offs = np.asarray(offsets, np.int64)
+        rrd = 0 if lockstep else self.c_rrd
+        faw = 0 if lockstep else self.c_faw
+        if rrd == 0 and faw == 0:
+            solved = self._solve_chains(gaps, offs, ref_phase)
+            if solved is None:
+                return None
+            R, tfaw_stall, refresh_stall, n_refresh = solved
+            finish = R[:, -1] + self.c_rc
+        else:
+            if len(offs) > 1 and rrd == 0:
+                # a four-activate window without the tRRD serializer that
+                # keeps issue order monotone has no provable closed-form
+                # arbitration order — stepped is forced (see README)
+                return None
+            solved = self._solve_coupled(gaps, offs, ref_phase, rrd, faw)
+            if solved is None:
+                return None
+            R, tfaw_stall, refresh_stall, n_refresh = solved
+            finish = R[-1, :] + self.c_rc
+        n_acts = a * banks
+        return self._package(trace, banks, lockstep, int(finish.max()),
+                             int(finish.min()), n_acts, tfaw_stall,
+                             refresh_stall, n_refresh)
+
+    def _package(self, trace, banks: int, lockstep: bool, cycles: int,
+                 min_cycles: int, n_acts: int, tfaw_stall: int,
+                 refresh_stall: int, n_refresh_stalls: int) -> ReplayResult:
+        tck = self.timing.tCK_ns
         ns = cycles * tck
         mix = trace.command_mix()
         analytic = (mix["AAP"] * self.timing.t_aap_ns
                     + mix["AP"] * self.timing.t_ap_ns)
         return ReplayResult(
             ns=ns, stall_ns=max(0.0, ns - analytic), cycles=cycles,
-            n_seqs=n_seq * banks, n_acts=n_acts * (banks if lockstep else 1),
+            n_seqs=trace.seqs.shape[0] * banks, n_acts=n_acts,
             banks=banks, max_bank_ns=ns, min_bank_ns=min_cycles * tck,
-            tfaw_stall_ns=rank.tfaw_stall * tck,
-            refresh_stall_ns=rank.refresh_stall * tck,
-            n_refresh_stalls=rank.n_refresh_stalls)
+            tfaw_stall_ns=tfaw_stall * tck,
+            refresh_stall_ns=refresh_stall * tck,
+            n_refresh_stalls=n_refresh_stalls)
 
 
 class SimdramPerfModel:
@@ -465,13 +790,17 @@ class SimdramPerfModel:
         self.replay_timing = replay or TraceReplayTiming(self.timing)
 
     def replay_result(self, trace, banks: int = 1, offsets_ns=None,
-                      refresh_phase_ns: float = 0.0) -> ReplayResult:
+                      refresh_phase_ns: float = 0.0, engine: str | None = None,
+                      cache=None) -> ReplayResult:
         """Replay a lowered trace on the per-bank FSM array (measured-style
         latency, tFAW/refresh windows, optional per-bank issue offsets and
-        cross-op refresh phase)."""
+        cross-op refresh phase).  ``engine`` overrides the timing's
+        ``replay_engine``; ``cache`` (a TraceCache) memoizes the closed-form
+        result so warm replays are a table lookup."""
         return self.replay_timing.replay(trace, banks=banks,
                                          offsets_ns=offsets_ns,
-                                         refresh_phase_ns=refresh_phase_ns)
+                                         refresh_phase_ns=refresh_phase_ns,
+                                         engine=engine, cache=cache)
 
     def replay_latency_ns(self, trace, banks: int = 1) -> float:
         return self.replay_result(trace, banks=banks).ns

@@ -325,12 +325,13 @@ def test_simdram_argmax_charges_perf_stats():
     got = np.asarray(simdram_argmax(jnp.asarray(vals), n_bits=8,
                                     perf_stats=st))
     np.testing.assert_array_equal(got, vals.argmax(-1))
-    # V=100 → 128 lanes → 2 halving rounds × (greater + 2 if_else)
-    assert st.n_programs == 6
-    assert st.n_transposes == 4          # 2 loads + 2 stores, always
+    # V=100 → 128 lanes → 2 halving rounds + 5 SWAR strides, each a
+    # (greater + 2 if_else) triple
+    assert st.n_programs == 21
+    assert st.n_transposes == 3          # 2 loads + 1 store (indices only)
     assert st.max_banks == 2
     m = SimdramPerfModel()
-    exp_exec = 2 * (m.latency_ns(compile_bbop("greater", 8))
+    exp_exec = 7 * (m.latency_ns(compile_bbop("greater", 8))
                     + m.latency_ns(compile_bbop("if_else", 8))
                     + m.latency_ns(compile_bbop("if_else", 7)))
     assert st.exec_ns == pytest.approx(exp_exec, rel=1e-6)

@@ -1,0 +1,221 @@
+"""Vectorized trace-replay engine ≡ the stepped FSM oracle.
+
+PR-8 property suite.  The closed-form replay engine
+(``DRAMTiming(replay_engine="vectorized")``, the default) must reproduce
+the per-edge stepped FSM *exactly* — same finish time, cycle count, ACT
+count and stall attribution — or decline and let the stepped oracle run
+(exact-or-absent).  :class:`ReplayResult` is a frozen dataclass, so plain
+``==`` compares every field at once.
+
+Also covered here: the :class:`TraceCache` replay memo (hit/miss counters,
+key sensitivity, LRU bound), engine selection/validation, and the
+scheduler's ``"defer"``-policy equivalence anchor re-checked against both
+engines (the anchor is engine-independent precisely because the engines
+agree).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.circuits import ALL_OPS
+from repro.core.trace import TraceCache, compile_trace
+from repro.simdram.timing import DRAMTiming, TraceReplayTiming
+
+RNG = np.random.default_rng(0x8E9)
+
+
+def _timing(**kw) -> DRAMTiming:
+    return dataclasses.replace(DRAMTiming(), **kw)
+
+
+TIMINGS = {
+    "default": DRAMTiming(),
+    "noref": _timing(tREFI_ns=0.0),
+    "heavy": _timing(tREFI_ns=150.0, tRFC_ns=50.0),
+}
+
+
+def _both(t: DRAMTiming, trace, banks: int, offsets=None, phase=0.0):
+    rt = TraceReplayTiming(t)
+    v = rt.replay(trace, banks=banks, offsets_ns=offsets,
+                  refresh_phase_ns=phase, engine="vectorized")
+    s = rt.replay(trace, banks=banks, offsets_ns=offsets,
+                  refresh_phase_ns=phase, engine="stepped")
+    return v, s
+
+
+# ---------------------------------------------------------------------------
+# Property: vectorized ≡ stepped, full ReplayResult equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ALL_OPS)
+def test_every_table5_op_matches_stepped(op):
+    """All 16 Table-5 ops at 8 bits on the realistic 8-bank array."""
+    _, trace = compile_trace(op, 8)
+    v, s = _both(DRAMTiming(), trace, 8)
+    assert v == s, op
+
+
+@pytest.mark.parametrize("banks", [1, 2, 5, 8, 16])
+@pytest.mark.parametrize("op,n_bits", [
+    ("addition", 4), ("addition", 16), ("multiplication", 8),
+    ("xor_reduction", 8), ("relu", 32), ("greater", 16)])
+def test_width_bank_refresh_grid(op, n_bits, banks):
+    """Representative ops across element widths × bank counts × the
+    refresh grid (refresh off / DDR4 default / toy refresh-heavy)."""
+    _, trace = compile_trace(op, n_bits)
+    for tname, t in TIMINGS.items():
+        v, s = _both(t, trace, banks)
+        assert v == s, (op, n_bits, banks, tname)
+
+
+@pytest.mark.parametrize("banks", [2, 5, 8])
+def test_issue_offsets_and_refresh_phase(banks):
+    """Per-bank issue offsets (skewed and scrambled) combined with a
+    threaded cross-op refresh phase — the hard desynchronized cases."""
+    _, trace = compile_trace("addition", 8)
+    offsets_cases = (
+        None,
+        tuple(3.0 * i for i in range(banks)),
+        tuple(float(o) for o in RNG.choice(256, size=banks, replace=False)),
+    )
+    for tname, t in (("default", DRAMTiming()), ("heavy", TIMINGS["heavy"])):
+        for offs in offsets_cases:
+            for phase in (0.0, 500.0, 7000.0):
+                v, s = _both(t, trace, banks, offsets=offs, phase=phase)
+                assert v == s, (banks, tname, offs, phase)
+
+
+def test_lockstep_policy_matches():
+    """The legacy broadcast FSM replays identically under both engines."""
+    rt = TraceReplayTiming()
+    for op in ("addition", "division"):
+        _, trace = compile_trace(op, 8)
+        v = rt.replay(trace, banks=8, policy="lockstep", engine="vectorized")
+        s = rt.replay(trace, banks=8, policy="lockstep", engine="stepped")
+        assert v == s, op
+
+
+def test_vectorized_path_actually_engages():
+    """Guard against the closed form silently declining everywhere —
+    parity alone would still pass via the stepped fallback.  On the
+    realistic default configuration the solver must produce the result
+    itself, and that result must equal the oracle's."""
+    rt = TraceReplayTiming()
+    for op in ("addition", "relu", "greater", "xor_reduction"):
+        _, trace = compile_trace(op, 8)
+        res = rt._replay_vectorized(trace, 8, [0] * 8, False, 0)
+        assert res is not None, f"{op}: closed form declined"
+        assert res == rt._replay_stepped(trace, 8, [0] * 8, False, 0), op
+
+
+def test_hypothesis_random_offsets_and_phases():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _, trace = compile_trace("addition", 8)
+
+    @settings(max_examples=25, deadline=None)
+    @given(banks=st.integers(1, 8),
+           phase=st.floats(0.0, 16000.0, allow_nan=False),
+           seed=st.integers(0, 2 ** 16))
+    def prop(banks, phase, seed):
+        r = np.random.default_rng(seed)
+        offs = tuple(float(x) for x in r.integers(0, 300, size=banks))
+        v, s = _both(DRAMTiming(), trace, banks, offsets=offs, phase=phase)
+        assert v == s
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Engine selection and validation
+# ---------------------------------------------------------------------------
+
+
+def test_default_engine_is_vectorized_and_validated():
+    assert DRAMTiming().replay_engine == "vectorized"
+    with pytest.raises(ValueError, match="replay engine"):
+        TraceReplayTiming(_timing(replay_engine="bogus"))
+    rt = TraceReplayTiming()
+    _, trace = compile_trace("relu", 8)
+    with pytest.raises(ValueError, match="replay engine"):
+        rt.replay(trace, engine="nope")
+
+
+# ---------------------------------------------------------------------------
+# TraceCache replay memo: counters, key sensitivity, LRU bound
+# ---------------------------------------------------------------------------
+
+
+def test_replay_memo_counters_and_key_sensitivity():
+    _, trace = compile_trace("addition", 8)
+    rt = TraceReplayTiming()
+    memo = TraceCache()
+    r1 = rt.replay(trace, banks=4, cache=memo)
+    st = memo.stats()
+    assert (st["replay_misses"], st["replay_hits"]) == (1, 0)
+    assert st["replay_entries"] == 1
+    r2 = rt.replay(trace, banks=4, cache=memo)
+    assert r2 is r1                  # warm hit is the memoized object
+    assert memo.stats()["replay_hits"] == 1
+    # every key dimension misses independently
+    rt.replay(trace, banks=8, cache=memo)
+    rt.replay(trace, banks=4, cache=memo, engine="stepped")
+    rt.replay(trace, banks=4, cache=memo, refresh_phase_ns=500.0)
+    rt.replay(trace, banks=4, cache=memo, policy="lockstep")
+    st = memo.stats()
+    assert st["replay_misses"] == 5
+    assert st["replay_entries"] == 5
+    # a different timing signature cannot share entries either
+    TraceReplayTiming(_timing(tFAW_ns=0.0)).replay(trace, banks=4,
+                                                   cache=memo)
+    assert memo.stats()["replay_misses"] == 6
+    # and the memoized results all agree with a fresh uncached replay
+    assert rt.replay(trace, banks=4) == r1
+
+
+def test_replay_memo_lru_bound_and_validation():
+    with pytest.raises(ValueError, match="replay_capacity"):
+        TraceCache(replay_capacity=0)
+    _, trace = compile_trace("relu", 8)
+    memo = TraceCache(replay_capacity=3)
+    rt = TraceReplayTiming()
+    for banks in (1, 2, 3, 4):
+        rt.replay(trace, banks=banks, cache=memo)
+    st = memo.stats()
+    assert st["replay_entries"] == 3     # bounded
+    assert st["replay_misses"] == 4
+    rt.replay(trace, banks=4, cache=memo)          # most recent: still hot
+    assert memo.stats()["replay_hits"] == 1
+    rt.replay(trace, banks=1, cache=memo)          # oldest: evicted
+    assert memo.stats()["replay_misses"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Scheduler "defer" anchor is engine-independent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "stepped"])
+def test_defer_schedule_matches_replay_under_both_engines(engine):
+    """The scheduler event loop (which always steps) equals the replay
+    substrate under the ``"defer"`` policy whichever engine serves the
+    replay — the PR-6 acceptance anchor survives the engine swap."""
+    from repro.ops import BankScheduler
+    t = _timing(tREFI_ns=150.0, tRFC_ns=50.0)
+    rt = TraceReplayTiming(t)
+    _, trace = compile_trace("addition", 8)
+    sched = BankScheduler(timing=t, n_banks=4, refresh_policy="defer")
+    sched.enqueue(trace, banks=4)
+    got = sched.run()
+    want = rt.replay(trace, banks=4, engine=engine)
+    assert got.ns == pytest.approx(want.ns)
+    assert got.cycles == want.cycles
+    assert got.n_acts == want.n_acts
+    assert got.tfaw_stall_ns == pytest.approx(want.tfaw_stall_ns)
+    assert got.refresh_stall_ns == pytest.approx(want.refresh_stall_ns)
+    assert got.n_refresh_stalls == want.n_refresh_stalls

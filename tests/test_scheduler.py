@@ -17,7 +17,7 @@ Covers the tentpole acceptance criteria and the satellites that rode along:
 * **satellites** — ``PerfStats.snapshot()`` is structured and JSON-safe,
   ``note_bank_skew`` offsets are scoped per machine session,
   ``execute_heterogeneous`` matches solo dispatch, and ``greedy_decode``
-  accepts the uniform ``machine=`` kwarg (``sampler_machine=`` warns).
+  accepts the uniform ``machine=`` kwarg.
 """
 import dataclasses
 import json
@@ -433,7 +433,7 @@ def test_execute_heterogeneous_matches_solo_dispatch():
 # ---------------------------------------------------------------------------
 
 
-def _tiny_decode(machine=None, sampler_machine=None):
+def _tiny_decode(machine=None):
     from repro.configs import get_reduced
     from repro.models.params import init_params
     from repro.models.transformer import model_defs
@@ -442,25 +442,23 @@ def _tiny_decode(machine=None, sampler_machine=None):
     params = init_params(model_defs(cfg), jax.random.key(0))
     prompt = jax.random.randint(jax.random.key(1), (2, 3), 0, cfg.vocab)
     return greedy_decode(params, cfg, prompt, steps=2, sampler="simdram",
-                         machine=machine, sampler_machine=sampler_machine)
+                         machine=machine)
 
 
-def test_greedy_decode_machine_kwarg_and_deprecated_alias():
-    m_new = SimdramMachine()
-    m_old = SimdramMachine()
-    out_new = _tiny_decode(machine=m_new)
-    with pytest.warns(DeprecationWarning, match="sampler_machine"):
-        out_old = _tiny_decode(sampler_machine=m_old)
-    np.testing.assert_array_equal(np.asarray(out_new), np.asarray(out_old))
-    # both spellings drove their machine: the tournament charged its stats
-    assert m_new.stats.n_programs > 0
-    assert m_old.stats.n_programs == m_new.stats.n_programs
+def test_greedy_decode_machine_kwarg():
+    m1 = SimdramMachine()
+    m2 = SimdramMachine()
+    out1 = _tiny_decode(machine=m1)
+    out2 = _tiny_decode(machine=m2)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    # the kwarg drove its machine: the tournament charged its stats, and
+    # isolated machines charged identically
+    assert m1.stats.n_programs > 0
+    assert m2.stats.n_programs == m1.stats.n_programs
 
 
-def test_greedy_decode_conflicting_machine_kwargs_rejected():
+def test_greedy_decode_rejects_removed_sampler_machine_kwarg():
     from repro.serve.decode import greedy_decode
-    m1, m2 = SimdramMachine(), SimdramMachine()
-    with pytest.warns(DeprecationWarning), \
-            pytest.raises(ValueError, match="machine="):
+    with pytest.raises(TypeError, match="sampler_machine"):
         greedy_decode(None, None, jnp.zeros((1, 1), jnp.int32), 1,
-                      machine=m1, sampler_machine=m2)
+                      sampler_machine=SimdramMachine())
