@@ -11,7 +11,7 @@ including transposition/movement overhead; ``rowscale16_gops`` rescales the
 same charged command stream to a full 8 kB row × 16 banks for the
 paper-comparable Fig. 9/10 speedup and efficiency columns.
 
-Three gated sections ride along under ``--smoke``:
+Four gated sections ride along under ``--smoke``:
 
 * ``cache/…`` — compile/lower-cache hot-path speedup of an 8-op chained
   pipeline (cold synthesis+allocation+lowering vs warm cache fetch) with
@@ -26,6 +26,14 @@ Three gated sections ride along under ``--smoke``:
   side.  The gates require ``replay_ns ≥ lockstep_ns ≥ analytic_ns`` and
   ``refresh_on_ns ≥ refresh_off_ns`` on every row (desynchronization,
   activation windows and refresh can only add stalls).
+* ``fuse/…`` — cross-op trace fusion: the 8-op chained pipeline compiled
+  to one fused ``LoweredTrace`` (row-allocation reuse across op seams) vs
+  the per-op execution of the identical chain.  The gates require
+  ``fuse_fused_gops ≥ fuse_unfused_gops`` with ``fuse_elided_hops > 0``
+  (fusion must actually remove inter-op relocations) and, under the
+  refresh-phased replay clock, ``fuse_fused_replay_ns ≤
+  fuse_unfused_replay_ns`` (one concatenated command stream cannot replay
+  slower than the same stream issued per-op).
 * ``sched/…`` — the bank-level scheduler: a mixed two-tenant workload
   drained through ``machine.submit()`` packs heterogeneous requests across
   banks, so the aggregate rate must beat the serialized single-stream
@@ -341,6 +349,72 @@ def cache_and_replay(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Cross-op trace fusion: fused single-trace pipeline vs per-op execution
+# ---------------------------------------------------------------------------
+
+def fusion_rows(smoke: bool = False) -> None:
+    from repro.ops import (bbop_abs, bbop_add, bbop_mul, bbop_relu, bbop_sub,
+                           simdram_pipeline)
+
+    n = 512 if smoke else 4096
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+
+    def chain8(**pipe_kw):
+        with simdram_pipeline(timed=True, **pipe_kw) as p:
+            x, y = p.load([a, b], 8)
+            t = bbop_add(x, y, 8)
+            t = bbop_mul(t, x, 8)
+            t = bbop_sub(t, y, 8)
+            t = bbop_relu(t, 8)
+            t = bbop_add(t, x, 8)
+            t = bbop_abs(t, 8)
+            t = bbop_sub(t, x, 8)
+            t = bbop_relu(t, 8)
+            out = _block(p.store(t))
+        return out, p.stats
+
+    # fuse/chain8: the whole 8-op pipeline compiled to ONE LoweredTrace —
+    # the 7 inter-op LISA relocations become row-allocation reuse, so the
+    # fused run must charge strictly fewer movement hops and its modeled
+    # rate can only improve.  Gated: fuse_fused_gops >= fuse_unfused_gops
+    # and fuse_elided_hops > 0.
+    out_un, st_un = chain8()
+    out_fu, st_fu = chain8(fused_trace=True)
+    if not np.array_equal(np.asarray(out_un), np.asarray(out_fu)):
+        raise AssertionError("fused chain8 result != unfused")
+    elided = st_un.n_moves_intra - st_fu.n_moves_intra
+    if elided != st_fu.n_moves_elided:
+        raise AssertionError(
+            f"elided-hop accounting drifted: intra delta {elided} vs "
+            f"counted {st_fu.n_moves_elided}")
+    row(f"fuse/chain8/n{n}", 0,
+        f"fuse_fused_gops={st_fu.gops():.4f} "
+        f"fuse_unfused_gops={st_un.gops():.4f} "
+        f"fuse_elided_hops={elided} "
+        f"fused_programs={st_fu.n_programs} "
+        f"unfused_programs={st_un.n_programs} "
+        f"fused_movement_ns={st_fu.movement_ns:.1f} "
+        f"unfused_movement_ns={st_un.movement_ns:.1f}")
+
+    # fuse/replay: the same chain through the cycle-accurate replay clock.
+    # Both sides thread the refresh phase across op boundaries
+    # (refresh_phase=True) so they replay the identical command stream
+    # against the identical refresh grid — per-op anchoring would hand the
+    # unfused side a free refresh reset at every seam and the comparison
+    # would gate on an artifact, not on fusion.  Gated:
+    # fuse_unfused_replay_ns >= fuse_fused_replay_ns.
+    _, rp_un = chain8(model="replay", refresh_phase=True)
+    _, rp_fu = chain8(model="replay", refresh_phase=True, fused_trace=True)
+    row(f"fuse/replay/chain8/n{n}", 0,
+        f"fuse_unfused_replay_ns={rp_un.replay_ns:.1f} "
+        f"fuse_fused_replay_ns={rp_fu.replay_ns:.1f} "
+        f"fused_stall_ns={rp_fu.replay_stall_ns:.1f} "
+        f"unfused_stall_ns={rp_un.replay_stall_ns:.1f}")
+
+
+# ---------------------------------------------------------------------------
 # Bank-level scheduler: mixed-tenant submit/drain + refresh-policy A/B
 # ---------------------------------------------------------------------------
 
@@ -475,6 +549,7 @@ def live(smoke: bool = False) -> None:
 def main(smoke: bool = False) -> None:
     measured(smoke=smoke)
     cache_and_replay(smoke=smoke)
+    fusion_rows(smoke=smoke)
     scheduler_rows(smoke=smoke)
     live(smoke=smoke)
     if smoke:

@@ -64,8 +64,13 @@ def bad_gate_rows(text: str) -> list[str]:
       over the serialized single stream), and ``sched_stall_ns >=
       sched_aware_ns`` (under refresh-heavy timing, eager issue pays for
       aborted mid-sequence refreshes; pausing between sequences cannot be
-      slower).  Both members of every present pair must be finite and
-      non-zero.
+      slower), ``fuse_fused_gops >= fuse_unfused_gops`` and
+      ``fuse_unfused_replay_ns >= fuse_fused_replay_ns`` (fusing a chain
+      into one trace removes inter-op relocations and cannot slow the
+      refresh-phased replay).  Both members of every present pair must be
+      finite and non-zero.
+    * any ``fuse_elided_hops=`` must be > 0 — the fused chain must
+      actually elide inter-op movement, not just concatenate traces.
     * the vectorized replay engine gates: ``vector_parity_delta_ns=`` must
       be exactly zero (the closed form is exact-or-absent — any non-zero
       delta means it disagreed with the stepped FSM oracle instead of
@@ -88,6 +93,12 @@ def bad_gate_rows(text: str) -> list[str]:
         ("lint_cold_us", "lint_warm_us",
          "the memoized re-lint on cache hits must be cheaper than the "
          "first full liveness pass"),
+        ("fuse_fused_gops", "fuse_unfused_gops",
+         "fusing a chain into one trace elides inter-op relocations, so "
+         "the fused modeled rate cannot be lower"),
+        ("fuse_unfused_replay_ns", "fuse_fused_replay_ns",
+         "the fused trace replays the same refresh-phased command stream "
+         "in one pass, so it cannot be slower"),
     )
     bad = []
     for line in text.splitlines():
@@ -104,6 +115,12 @@ def bad_gate_rows(text: str) -> list[str]:
             if r is None or not math.isfinite(r) or r <= 0:
                 bad.append(f"cache_hit_rate={kv['cache_hit_rate']} "
                            f"(must be > 0) in: {line}")
+        if "fuse_elided_hops" in kv:
+            h = num("fuse_elided_hops")
+            if h is None or not math.isfinite(h) or h <= 0:
+                bad.append(f"fuse_elided_hops={kv['fuse_elided_hops']} "
+                           f"(fusion must elide at least one inter-op "
+                           f"hop) in: {line}")
         if "vector_parity_delta_ns" in kv:
             d = num("vector_parity_delta_ns")
             if d is None or not math.isfinite(d) or d != 0:

@@ -242,6 +242,7 @@ class PerfStats:
     n_commands: int = 0
     n_moves_intra: int = 0
     n_moves_inter: int = 0
+    n_moves_elided: int = 0    # inter-op hops the fusion allocator removed
     n_transposes_to: int = 0
     n_transposes_from: int = 0
     elem_ops: int = 0
@@ -321,14 +322,35 @@ class PerfStats:
         self.exec_nj += en * banks
         self.n_programs += 1
         self.n_commands += cmds
-        self.elem_ops += lanes * banks
         self.max_banks = max(self.max_banks, banks)
-        d = self.per_op.setdefault(f"{prog.name}/{prog.n_bits}b",
-                                   {"calls": 0, "ns": 0.0, "nj": 0.0,
-                                    "replay_ns": 0.0})
-        d["calls"] += 1
-        d["ns"] += lat
-        d["nj"] += en * banks
+        # fused chain traces attribute per_op charges to the constituent
+        # stages (proportional to each stage's share of command sequences),
+        # so per-op stall attribution survives fusion — the aggregate
+        # chain gets no row of its own (it would double-count)
+        chain = getattr(trace, "chain", None)
+        # a fused trace performs one element-op per *stage* per lane — the
+        # same work the unfused chain counts across its separate calls
+        n_stage_ops = (len(chain.stages)
+                       if chain is not None and getattr(chain, "stages", ())
+                       else 1)
+        self.elem_ops += lanes * banks * n_stage_ops
+        if chain is not None and getattr(chain, "stages", ()):
+            total = max(1, sum(s.seq_end - s.seq_start
+                               for s in chain.stages))
+            shares = [(f"{s.op}/{prog.n_bits}b",
+                       (s.seq_end - s.seq_start) / total)
+                      for s in chain.stages]
+        else:
+            shares = [(f"{prog.name}/{prog.n_bits}b", 1.0)]
+        entries = []
+        for key, frac in shares:
+            d = self.per_op.setdefault(key,
+                                       {"calls": 0, "ns": 0.0, "nj": 0.0,
+                                        "replay_ns": 0.0})
+            d["calls"] += 1
+            d["ns"] += lat * frac
+            d["nj"] += en * banks * frac
+            entries.append((d, frac))
         if self.mode == "replay" and replayable:
             # phase = the replay clock *before* this op starts
             phase_ns = self.replay_ns if self.refresh_phase else 0.0
@@ -340,7 +362,15 @@ class PerfStats:
             self.replay_bank_spread_ns += res.bank_spread_ns
             self.replay_nj += self.model.replay_energy_nj(
                 prog, trace, banks=banks, result=res)
-            d["replay_ns"] += res.ns
+            for d, frac in entries:
+                d["replay_ns"] += res.ns * frac
+
+    def note_elided_movement(self, n_rows: int) -> None:
+        """Count an inter-op relocation the fusion allocator removed:
+        metered (so fused-vs-unfused hop deltas are provable from one
+        snapshot) but never charged — the whole point of eliding it."""
+        del n_rows          # the hop never happens; only its count matters
+        self.n_moves_elided += 1
 
     def charge_movement(self, n_rows: int, inter_bank: bool = False) -> None:
         if inter_bank:
@@ -480,6 +510,7 @@ class PerfStats:
                               "n": self.n_moves_intra},
                     "inter": {"ns": self.movement_inter_ns,
                               "n": self.n_moves_inter},
+                    "elided": {"ns": 0.0, "n": self.n_moves_elided},
                 },
             },
             "transposition": {
@@ -527,6 +558,12 @@ class PerfStats:
             f"({mv['per_kind']['intra']['n']} hops)",
             f"    inter-bank PSM  {mv['per_kind']['inter']['ns']:9.1f} ns  "
             f"({mv['per_kind']['inter']['n']} transfers)",
+        ]
+        if mv["per_kind"]["elided"]["n"]:
+            lines.append(
+                f"    fusion-elided         0.0 ns  "
+                f"({mv['per_kind']['elided']['n']} hops removed)")
+        lines += [
             f"  transpose  {tr['ns']:12.1f} ns  "
             f"({tr['n']} passes)",
             f"    to_bitplanes    {tr['per_kind']['to']['ns']:9.1f} ns  "
@@ -642,6 +679,10 @@ def _movement_hook(kind: str, n_rows: int, banks: int | None = None,
     inter = kind == "inter"
     eff = _current_machine()
     for st in _charging_stats(eff):
+        if kind == "elided":
+            # a hop the fusion allocator removed: counted, never charged
+            st.note_elided_movement(n_rows)
+            continue
         st.charge_movement(n_rows, inter_bank=inter)
         if inter and banks:
             # scatter: the serialized bus transfer desynchronizes the

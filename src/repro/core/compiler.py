@@ -28,11 +28,14 @@ paper's Table 5 command counts (e.g. 8n+1 for addition) exactly.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 
 from .graph import MAJ, PI, LogicGraph, lit_neg, lit_node
 from .uprogram import (AAP, AP, C0, C1, CRow, DCC_CELLS, DRow, N_B_CELLS,
-                       PAIR_ADDRESSES, Port, T_CELLS, UProgram)
+                       PAIR_ADDRESSES, Port, T_CELLS, UProgram,
+                       dedupe_const_stores, eliminate_dead_writes,
+                       rename_uops)
 
 # value ids: int MIG node ids for MAJ results; strings for PI values.
 Value = object
@@ -648,3 +651,177 @@ def compile_flat(name: str, g: LogicGraph, binding: dict[str, object],
     ops = coalesce_case2(sched.ops)
     return UProgram(name=name, n_bits=n_bits, prologue=ops, body=[],
                     epilogue=[], body_reps=0)
+
+
+# ---------------------------------------------------------------------------
+# Cross-op trace fusion (ROADMAP item 5): whole pipelines → one μProgram
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainStage:
+    """One op application inside a fused pipeline, in SSA form.
+
+    ``op`` names a registered operation; ``inputs`` are value names —
+    chain-external operands or earlier stages' outputs — bound
+    *positionally* to the op's declared operand arrays; ``output`` names
+    the value this stage produces (single-assignment: no value may be
+    defined twice)."""
+    op: str
+    inputs: tuple[str, ...]
+    output: str
+
+
+def _as_stage(s) -> ChainStage:
+    """Coerce ``ChainStage`` | ``(op, inputs, output)`` (inputs may be a
+    bare string for unary ops) to a normalized :class:`ChainStage`."""
+    if isinstance(s, ChainStage):
+        return ChainStage(str(s.op), tuple(str(i) for i in s.inputs),
+                          str(s.output))
+    op, ins, out = s
+    if isinstance(ins, str):
+        ins = (ins,)
+    return ChainStage(str(op), tuple(str(i) for i in ins), str(out))
+
+
+def chain_signature(stages, outputs=None) -> str:
+    """Canonical cache-key string for a fused chain: the constituent op
+    names plus the full value wiring (and the requested outputs, when
+    explicit) — everything :func:`compile_chain` consumes besides the
+    width/optimize pair that completes the cache key."""
+    stages = [_as_stage(s) for s in stages]
+    sig = "chain:" + "|".join(
+        f"{st.op}({','.join(st.inputs)})->{st.output}" for st in stages)
+    if outputs is not None:
+        sig += ">>" + ",".join(outputs)
+    return sig
+
+
+def _check_value_name(v: str) -> None:
+    if v == "cell" or v.startswith("_fuse"):
+        raise ValueError(f"chain value name {v!r} is reserved ('cell' "
+                         "collides with B-group row keys; '_fuse*' is the "
+                         "fused per-stage scratch namespace)")
+
+
+def compile_chain(stages, n_bits: int, optimize: bool = True,
+                  compile_fn=None, outputs=None,
+                  name: str | None = None) -> UProgram:
+    """Fuse a pipeline of registered ops into ONE μProgram (the cross-op
+    half of SIMDRAM Step 2, which the paper runs per operation only).
+
+    Each stage's μProgram is compiled (``compile_fn(op, n_bits, optimize)``
+    — default: the process-wide registry), flattened, and renamed into a
+    shared value namespace: the stage's declared operand arrays become the
+    stage's input value names, its output array becomes the stage's output
+    value, and every other array it touches moves to a private
+    ``_fuse{k}_*`` namespace.  Row-allocation reuse falls out of the
+    renaming — a producer's output rows and its consumer's input rows are
+    now the *same* symbolic rows, so one :func:`~repro.core.trace
+    .lower_program` call binds them to the same physical rows and no
+    inter-op copy (no LISA hop) remains at the seam.  Two seam
+    optimizations then run over the concatenated stream:
+    :func:`~repro.core.uprogram.dedupe_const_stores` (a stage
+    re-initializing a B-cell to a constant the boundary already left
+    there) and :func:`~repro.core.uprogram.eliminate_dead_writes` (rows
+    only the per-op contract kept alive, e.g. an unconsumed epilogue
+    output).
+
+    ``outputs=None`` keeps the chain's *leaves* (values produced but never
+    consumed); pass an explicit tuple to keep intermediates readable too.
+    The returned program carries ``chain`` metadata (per-stage μOp spans,
+    constituent ops, elision counters) that lowering converts to
+    :class:`~repro.core.trace.ChainInfo` seam metadata.
+    """
+    stages = tuple(_as_stage(s) for s in stages)
+    if not stages:
+        raise ValueError("compile_chain needs at least one stage")
+    if compile_fn is None:
+        from .circuits import compile_operation as compile_fn
+    # SSA validation + external-input discovery (first-use order)
+    produced: list[str] = []
+    external: list[str] = []
+    for st in stages:
+        for v in st.inputs:
+            _check_value_name(v)
+            if v not in produced and v not in external:
+                external.append(v)
+        _check_value_name(st.output)
+        if st.output in produced or st.output in external:
+            raise ValueError(f"chain value {st.output!r} is redefined — "
+                             "chain values are single-assignment")
+        produced.append(st.output)
+    consumed = {v for st in stages for v in st.inputs}
+    if outputs is None:
+        outs = tuple(v for v in produced if v not in consumed)
+    else:
+        outs = tuple(outputs)
+        unknown = [o for o in outs if o not in produced]
+        if unknown:
+            raise ValueError(f"requested chain outputs {unknown} are not "
+                             "produced by any stage")
+    # per-stage compile → flatten → rename into the shared value namespace
+    streams: list[list] = []
+    unfused_rows = 0        # Σ per-stage row footprints (per-op lowering)
+    for k, st in enumerate(stages):
+        prog = compile_fn(st.op, n_bits, optimize)
+        names = tuple(dict.fromkeys(prog.inputs))
+        if len(st.inputs) != len(names):
+            raise ValueError(
+                f"chain stage {k} ({st.op!r}) takes {len(names)} operands "
+                f"{names}, got {len(st.inputs)}")
+        if len(prog.outputs) != 1:
+            raise ValueError(
+                f"chain stage {k} ({st.op!r}) has outputs {prog.outputs} — "
+                "fusion chains single-output ops")
+        ops = prog.flatten()
+        renames = dict(zip(names, st.inputs))
+        renames[prog.outputs[0]] = st.output
+        for u in ops:
+            for r in _drows(u):
+                if r.array not in renames:
+                    renames[r.array] = f"_fuse{k}_{r.array}"
+        unfused_rows += len({(r.array, r.bit) for u in ops
+                             for r in _drows(u)})
+        streams.append(rename_uops(ops, renames))
+    # concatenate + seam optimizations, tracking original indices so the
+    # per-stage spans survive into the optimized stream
+    starts = [0]
+    for ops in streams:
+        starts.append(starts[-1] + len(ops))
+    flat = [u for ops in streams for u in ops]
+    n_raw = len(flat)
+    flat, k1 = dedupe_const_stores(flat)
+    flat, k2 = eliminate_dead_writes(flat, outs + tuple(external))
+    kept = [k1[j] for j in k2]
+    spans = tuple(
+        (st.op, st.output,
+         bisect.bisect_left(kept, starts[k]),
+         bisect.bisect_left(kept, starts[k + 1]))
+        for k, st in enumerate(stages))
+    arrays = {(r.array, r.bit) for u in flat for r in _drows(u)}
+    chain_meta = {
+        "stages": spans,
+        "ops": tuple(dict.fromkeys(st.op for st in stages)),
+        "elided_rows": unfused_rows - len(arrays),
+        "elided_seqs": n_raw - len(flat),
+    }
+    scratch = tuple(sorted({a for a, _ in arrays}
+                           - set(external) - set(outs)))
+    cname = name or "chain(" + "+".join(st.op for st in stages) + ")"
+    return UProgram(name=cname, n_bits=n_bits, prologue=flat, body=[],
+                    epilogue=[], body_reps=0, inputs=tuple(external),
+                    outputs=outs, scratch=scratch, chain=chain_meta)
+
+
+def fuse_chain(specs, n_bits: int, optimize: bool = True, compile_fn=None,
+               outputs=None, name: str | None = None):
+    """Compile a pipeline spec straight to one executable
+    :class:`~repro.core.trace.LoweredTrace` (``compile_chain`` +
+    ``lower_program``); the trace carries
+    :class:`~repro.core.trace.ChainInfo` seam metadata.  Cached variants
+    live in :meth:`~repro.core.trace.TraceCache.get_chain`."""
+    from .trace import lower_program
+    return lower_program(compile_chain(specs, n_bits, optimize=optimize,
+                                       compile_fn=compile_fn,
+                                       outputs=outputs, name=name))

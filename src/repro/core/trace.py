@@ -133,6 +133,58 @@ def _uop_drows(u) -> list[DRow]:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class ChainStageInfo:
+    """One fused stage's seam spans inside a chain trace:
+    ``seqs[seq_start:seq_end]`` / ``cmds[cmd_start:cmd_end]`` are the
+    command sequences this stage contributed after seam optimization, and
+    ``value`` is the SSA value name the stage produces."""
+    op: str
+    value: str
+    seq_start: int
+    seq_end: int
+    cmd_start: int
+    cmd_end: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainInfo:
+    """Seam metadata on a fused cross-op trace (see
+    :func:`repro.core.compiler.compile_chain`): per-stage command-sequence
+    spans so replay timing, TraceLint and per-op stall attribution still
+    see op boundaries; the constituent ``ops`` (the cache-invalidation
+    keys — redefining any of them must evict the fused entry); and the
+    rows/sequences the cross-op allocator elided versus per-op lowering."""
+    stages: tuple
+    ops: tuple
+    elided_rows: int = 0
+    elided_seqs: int = 0
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+
+def _chain_info(meta, seqs) -> "ChainInfo | None":
+    """μProgram chain metadata (flattened-μOp spans) → trace seam metadata.
+    One flattened μOp encodes to exactly one ``seqs`` row (see
+    :func:`encode_uops`), so μOp spans ARE sequence spans; command spans
+    read off the seqs table."""
+    if not meta:
+        return None
+    stages = []
+    for op, value, s, e in meta["stages"]:
+        if s < e:
+            cs, ce = int(seqs[s, 1]), int(seqs[e - 1, 2])
+        else:  # stage fully elided by seam optimization: empty span
+            cs = ce = int(seqs[s - 1, 2]) if s > 0 else 0
+        stages.append(ChainStageInfo(str(op), str(value), int(s), int(e),
+                                     cs, ce))
+    return ChainInfo(stages=tuple(stages), ops=tuple(meta["ops"]),
+                     elided_rows=int(meta.get("elided_rows", 0)),
+                     elided_seqs=int(meta.get("elided_seqs", 0)))
+
+
 @dataclasses.dataclass
 class LoweredTrace:
     """A μProgram lowered to the executable command-trace form.
@@ -154,6 +206,7 @@ class LoweredTrace:
     inputs: tuple = ()
     outputs: tuple = ()
     scratch: tuple = ()
+    chain: object = None                   # ChainInfo for fused chain traces
     _decoded: object = dataclasses.field(default=None, repr=False)
     _lint: object = dataclasses.field(default=None, repr=False)
     _fingerprint: object = dataclasses.field(default=None, repr=False)
@@ -172,7 +225,7 @@ class LoweredTrace:
         if self._fingerprint is None:
             h = hashlib.blake2b(digest_size=16)
             h.update(repr((self.name, self.n_bits, self.d_rows, self.inputs,
-                           self.outputs, self.scratch)).encode())
+                           self.outputs, self.scratch, self.chain)).encode())
             h.update(np.ascontiguousarray(self.cmds, np.int32).tobytes())
             h.update(np.ascontiguousarray(self.seqs, np.int32).tobytes())
             self._fingerprint = h.hexdigest()
@@ -318,7 +371,9 @@ def lower_program(prog: UProgram) -> LoweredTrace:
                          seqs=seqs, row_index=row_index,
                          d_rows=tuple(drows), inputs=tuple(prog.inputs),
                          outputs=tuple(prog.outputs),
-                         scratch=tuple(prog.scratch))
+                         scratch=tuple(prog.scratch),
+                         chain=_chain_info(getattr(prog, "chain", None),
+                                           seqs))
     with _LOWER_LOCK:
         # re-check: another thread may have lowered the same program while
         # we computed — keep the first trace so every caller sees one object
@@ -442,6 +497,44 @@ class TraceCache:
                 self._evictions += 1
             return entry
 
+    def get_chain(self, stages, n_bits: int, optimize: bool = True,
+                  verify: bool | None = None, outputs=None,
+                  name: str | None = None
+                  ) -> tuple[UProgram, LoweredTrace]:
+        """Fetch-or-compile a fused cross-op chain (see
+        :func:`repro.core.compiler.compile_chain`).
+
+        Keyed by the chain *signature* — the constituent op names plus the
+        full value wiring — rather than the display name, and the lowered
+        trace records its constituent ops in ``trace.chain.ops``, so
+        :meth:`invalidate` on ANY constituent op evicts the fused entry.
+        The per-stage compiles resolve through this cache's own compile
+        function, so machine-local op definitions fuse correctly."""
+        from .compiler import chain_signature, compile_chain
+        key = (chain_signature(stages, outputs), int(n_bits), bool(optimize))
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self._hits += 1
+                self._entries.move_to_end(key)
+                if self.verify if verify is None else verify:
+                    hit[1].lint().raise_for_errors()
+                return hit
+            self._misses += 1
+            prog = compile_chain(stages, n_bits, optimize=bool(optimize),
+                                 compile_fn=self._compile, outputs=outputs,
+                                 name=name)
+            trace = lower_program(prog)
+            if self.verify if verify is None else verify:
+                trace.lint().raise_for_errors()
+            entry = (prog, trace)
+            self._entries[key] = entry
+            while self.capacity is not None and \
+                    len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self._evictions += 1
+            return entry
+
     def replay_get(self, key: tuple):
         """Fetch a memoized closed-form ReplayResult (None on miss)."""
         with self._lock:
@@ -485,10 +578,17 @@ class TraceCache:
     def invalidate(self, name: str) -> int:
         """Drop every cached width/optimize variant of one operation —
         called when an op is (re)registered or unregistered so a stale
-        compile can never execute under the new definition.  Returns the
-        number of entries dropped."""
+        compile can never execute under the new definition.  Fused chain
+        entries are evicted when *any* constituent op (``trace.chain.ops``)
+        is invalidated, not only on a key match — a chain compiled against
+        the old definition is exactly as stale as the op itself.  Returns
+        the number of entries dropped."""
         with self._lock:
-            victims = [k for k in self._entries if k[0] == name]
+            victims = []
+            for k, (_prog, trace) in self._entries.items():
+                chain = getattr(trace, "chain", None)
+                if k[0] == name or (chain is not None and name in chain.ops):
+                    victims.append(k)
             for k in victims:
                 del self._entries[k]
             return len(victims)
@@ -541,6 +641,17 @@ def compile_trace(name: str, n_bits: int, optimize: bool = True,
     the memoized report makes this free on every later fetch.
     """
     return GLOBAL_TRACE_CACHE.get(name, n_bits, optimize, verify=verify)
+
+
+def compile_chain_trace(stages, n_bits: int, optimize: bool = True,
+                        verify: bool | None = None, outputs=None,
+                        name: str | None = None
+                        ) -> tuple[UProgram, LoweredTrace]:
+    """Fuse + lower a cross-op chain once per (signature, n_bits, optimize)
+    via the process-wide cache (see :meth:`TraceCache.get_chain`)."""
+    return GLOBAL_TRACE_CACHE.get_chain(stages, n_bits, optimize,
+                                        verify=verify, outputs=outputs,
+                                        name=name)
 
 
 def trace_cache_stats() -> dict:

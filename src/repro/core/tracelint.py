@@ -39,9 +39,22 @@ kind                  severity what it means
                                preceding triple-row MAJ did not define — its
                                pre-activation charge is destroyed, not latched
 ``undefined-output``  error    a declared output row never written by the trace
+``seam-clobber``      error    in a fused chain trace, a stage overwriting a row
+                               of a predecessor's output value while a later
+                               stage (or the chain output) still reads it
 ``bank-overlap``      warning  two co-scheduled requests from different tenants
                                share a bank and overlap on D-group rows
 ====================  ======== ==================================================
+
+Fused chain traces (``trace.chain`` — see
+:func:`repro.core.compiler.compile_chain`) additionally run the seam pass:
+the row-liveness walk already crosses op boundaries because the fused
+stream is one command array, and ``check_seams`` models the per-op
+output→input handoff on top of it, flagging cross-stage clobbers of
+still-live values.  :func:`lint_graph` is the pre-synthesis counterpart:
+it verifies a user ``build_graph`` AOIG *before* Step 1 runs, so
+malformed graphs fail at :meth:`SimdramMachine.define_op` with a graph
+diagnostic instead of a downstream synthesis crash.
 
 Verification is wired into every entry point that accepts a trace:
 ``compile_trace(..., verify=)`` / :meth:`TraceCache.get` (default-on; the
@@ -361,11 +374,65 @@ class _Linter:
                               f"output row {row_key_name(key)} is never "
                               f"written by the trace", end, idx)
 
+    def check_seams(self) -> None:
+        """Cross-op handoff pass for fused chain traces: model which rows
+        carry each stage's output value and flag a *different* stage
+        overwriting one of them while a later stage or the chain output
+        still reads it (``seam-clobber``).  The producer materializing its
+        own output rows is of course legal."""
+        from .trace import CMD_COPY
+        chain = self.trace.chain
+        producer: dict[int, tuple[str, int]] = {}   # row → (value, stage)
+        for k, stg in enumerate(chain.stages):
+            for key, idx in self.trace.row_index.items():
+                if isinstance(key, tuple) and key[0] == stg.value:
+                    producer[idx] = (stg.value, k)
+        if not producer:
+            return
+        outputs = set(self.trace.outputs)
+        cmds = self.trace.cmds.tolist()
+        last_read: dict[int, int] = {}
+        for i, (op, _a, b, _c) in enumerate(cmds):
+            if op == CMD_COPY and abs(int(b)) in producer:
+                last_read[abs(int(b))] = i
+        end = len(cmds)
+
+        def stage_of(i: int) -> int:
+            for k, stg in enumerate(chain.stages):
+                if stg.cmd_start <= i < stg.cmd_end:
+                    return k
+            return -1
+
+        for i, (op, a, _b, _c) in enumerate(cmds):
+            if op != CMD_COPY:
+                continue   # a MAJ writes B-group cells only, never D rows
+            r = abs(int(a))
+            hit = producer.get(r)
+            if hit is None:
+                continue
+            value, k_prod = hit
+            k_wr = stage_of(i)
+            if k_wr == k_prod:
+                continue
+            live_until = end if value in outputs else last_read.get(r, -1)
+            if live_until > i:
+                wr_op = chain.stages[k_wr].op if k_wr >= 0 else "?"
+                self.emit(
+                    "seam-clobber", ERROR,
+                    f"fused stage {k_wr} ({wr_op}) overwrites row "
+                    f"{row_key_name(self._key(a))} of value {value!r} "
+                    f"(produced by stage {k_prod}, "
+                    f"{chain.stages[k_prod].op}) while it is still live — "
+                    f"a later stage or the chain output still reads it",
+                    i, int(a))
+
     def run(self) -> LintReport:
         if self.check_shapes():
             self.check_seqs()
             self.check_liveness()
             self.check_outputs()
+            if getattr(self.trace, "chain", None) is not None:
+                self.check_seams()
         return LintReport(name=self.trace.name, n_bits=self.trace.n_bits,
                           diagnostics=tuple(self.out))
 
@@ -381,6 +448,75 @@ def lint_trace(trace: "LoweredTrace",
     :class:`TraceLintError`.
     """
     return _Linter(trace, max_diagnostics).run()
+
+
+# ---------------------------------------------------------------------------
+# Pre-synthesis pass: user build_graph AOIGs
+# ---------------------------------------------------------------------------
+
+
+def lint_graph(g, name: str = "graph",
+               max_diagnostics: int = 100) -> LintReport:
+    """Statically verify a user AOIG/MIG *before* synthesis runs.
+
+    ``machine.define_op(build_graph=...)`` accepts arbitrary user code; a
+    malformed graph used to surface as a crash deep inside Step-1
+    synthesis or row allocation.  This pass checks the graph itself:
+
+    * ``graph-no-outputs`` (error) — no named outputs: the op would
+      synthesize to an empty trace;
+    * ``graph-dup-output`` (error) — two outputs share a name (the later
+      one silently wins downstream);
+    * ``graph-bad-literal`` (error) — an output or gate fanin literal
+      referencing a node id outside the graph;
+    * ``graph-unused-input`` (warning) — a primary input no output
+      transitively depends on.
+    """
+    from .graph import PI, lit_node
+    out: list[Diagnostic] = []
+
+    def emit(kind: str, severity: str, message: str) -> None:
+        if len(out) < max_diagnostics:
+            out.append(Diagnostic(kind=kind, severity=severity,
+                                  message=message))
+
+    n = len(g.nodes)
+    if not g.outputs:
+        emit("graph-no-outputs", ERROR,
+             "graph declares no outputs — it would synthesize to an "
+             "empty operation")
+    seen: set[str] = set()
+    for oname, lit_ in g.outputs:
+        if oname in seen:
+            emit("graph-dup-output", ERROR,
+                 f"output {oname!r} is declared twice — the later "
+                 f"definition silently wins downstream")
+        seen.add(oname)
+        if not (0 <= lit_node(lit_) < n):
+            emit("graph-bad-literal", ERROR,
+                 f"output {oname!r} references node {lit_node(lit_)} "
+                 f"outside the {n}-node graph")
+    for nid, node in enumerate(g.nodes):
+        for f in node.fanin:
+            if not (0 <= lit_node(f) < n):
+                emit("graph-bad-literal", ERROR,
+                     f"node {nid} ({node.kind}) fanin references node "
+                     f"{lit_node(f)} outside the {n}-node graph")
+    live: set[int] = set()
+    stack = [lit_node(lit_) for _, lit_ in g.outputs
+             if 0 <= lit_node(lit_) < n]
+    while stack:
+        nid = stack.pop()
+        if nid in live:
+            continue
+        live.add(nid)
+        stack.extend(lit_node(f) for f in g.nodes[nid].fanin
+                     if 0 <= lit_node(f) < n)
+    for nid, node in enumerate(g.nodes):
+        if node.kind == PI and nid not in live:
+            emit("graph-unused-input", WARNING,
+                 f"primary input {node.name!r} feeds no output")
+    return LintReport(name=name, n_bits=0, diagnostics=tuple(out))
 
 
 # ---------------------------------------------------------------------------

@@ -171,6 +171,11 @@ class UProgram:
     inputs: tuple[str, ...] = ()
     outputs: tuple[str, ...] = ()
     scratch: tuple[str, ...] = ()     # D-group scratch arrays (name, n_bits implied)
+    # cross-op fusion metadata (None for ordinary programs; set by
+    # compile_chain): {"stages": ((op, value, start, end), ...),
+    # "elided_rows": int, "elided_seqs": int} — start/end index the
+    # flattened μOp stream, so lowering can recover per-stage seam spans
+    chain: dict | None = None
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -259,13 +264,149 @@ def _shift_uop(u: UOp, i: int):
     return u
 
 
+def rename_uops(uops: Sequence, renames: dict) -> list:
+    """Rename D-row array names throughout a *flattened* μOp stream.
+
+    The cross-op fusion pass uses this to stitch μPrograms together: one
+    program's output array is renamed to the value name the next program
+    reads, so both resolve to the *same* physical rows after lowering — the
+    row-allocation reuse that eliminates the inter-op LISA hop.  Ports and
+    C-group rows are untouched; ``bit``/``fixed`` are preserved.
+    """
+    if not renames:
+        return list(uops)
+
+    def fix(r):
+        if isinstance(r, DRow) and r.array in renames:
+            return DRow(renames[r.array], r.bit, r.fixed)
+        return r
+
+    out = []
+    for u in uops:
+        if isinstance(u, AAP):
+            src = u.src if isinstance(u.src, tuple) else fix(u.src)
+            out.append(AAP(src, tuple(fix(d) for d in u.dsts)))
+        else:
+            out.append(u)
+    return out
+
+
+def _cells_written(u) -> set:
+    """B-group cells a μOp overwrites (TRA results + AAP port destinations)."""
+    cells = set()
+    if isinstance(u, AP):
+        cells.update(p.cell for p in u.ports)
+    elif isinstance(u, AAP):
+        if isinstance(u.src, tuple):
+            cells.update(p.cell for p in u.src)
+        cells.update(d.cell for d in u.dsts if isinstance(d, Port))
+    return cells
+
+
+def dedupe_const_stores(uops: Sequence) -> tuple[list, list]:
+    """Drop AAP constant loads that restate a B-cell's current constant.
+
+    A forward pass tracking, per compute cell, the constant it is known to
+    hold (written from C0/C1 through some port polarity and not overwritten
+    since).  A later ``AAP C-row → port`` storing the same constant is a
+    redundant init — across a fusion seam this is the next op's state-init
+    prologue restating what the previous op left behind.  Only provably
+    redundant destinations are dropped; any other write invalidates the
+    cell's known constant.  Returns ``(kept_uops, kept_indices)`` so chain
+    compilation can keep per-stage spans aligned.
+    """
+    known: dict[int, bool] = {}       # cell → constant currently stored
+    out: list = []
+    kept: list[int] = []
+    for i, u in enumerate(uops):
+        if (isinstance(u, AAP) and isinstance(u.src, CRow)
+                and u.dsts and all(isinstance(d, Port) for d in u.dsts)):
+            val = u.src.one
+            fresh = tuple(d for d in u.dsts
+                          if known.get(d.cell) != (val != d.neg))
+            if not fresh:
+                continue              # every destination already holds it
+            for d in fresh:
+                known[d.cell] = (val != d.neg)
+            out.append(u if fresh == u.dsts else AAP(u.src, fresh))
+            kept.append(i)
+            continue
+        for c in _cells_written(u):
+            known.pop(c, None)
+        out.append(u)
+        kept.append(i)
+    return out, kept
+
+
+def eliminate_dead_writes(uops: Sequence, live_arrays) -> tuple[list, list]:
+    """Backward dead-store elimination over a flattened μOp stream.
+
+    ``live_arrays`` names the D-group arrays whose rows must survive to the
+    end (the outputs).  Walking backwards, an AAP destination row that is
+    never read downstream and is not an output is pruned; an AAP left with
+    no destinations is dropped entirely (a single-row ACTIVATE read is
+    non-destructive) — unless its source is a TRA triple, in which case the
+    majority side effect on the cells is preserved as a plain AP.  Port
+    destinations are always kept (cell liveness is not tracked backwards,
+    so every cell write is conservatively live).  Returns
+    ``(kept_uops, kept_indices)``.
+    """
+    full_live = set(live_arrays)
+    live: set[tuple[str, int]] = set()
+
+    def row_live(r: DRow) -> bool:
+        return r.array in full_live or (r.array, r.bit) in live
+
+    out: list = []
+    kept: list[int] = []
+    for i in range(len(uops) - 1, -1, -1):
+        u = uops[i]
+        if not isinstance(u, AAP):
+            out.append(u)
+            kept.append(i)
+            continue
+        dsts = tuple(d for d in u.dsts
+                     if not isinstance(d, DRow) or row_live(d))
+        if not dsts:
+            if isinstance(u.src, tuple):
+                out.append(AP(u.src))
+                kept.append(i)
+            continue
+        for d in dsts:
+            if isinstance(d, DRow) and d.array not in full_live:
+                live.discard((d.array, d.bit))
+        if isinstance(u.src, DRow):
+            live.add((u.src.array, u.src.bit))
+        out.append(u if dsts == u.dsts else AAP(u.src, dsts))
+        kept.append(i)
+    out.reverse()
+    kept.reverse()
+    return out, kept
+
+
 def concat_programs(name: str, progs: Sequence[UProgram], n_bits: int,
-                    inputs=(), outputs=(), scratch=()) -> UProgram:
+                    inputs=(), outputs=(), scratch=(),
+                    renames: Sequence[dict] | None = None,
+                    optimize_seams: bool = False) -> UProgram:
     """Compose μPrograms sequentially (used for class-3 ops like mul/div that
-    chain adder/mux μPrograms with shifted row bases)."""
+    chain adder/mux μPrograms with shifted row bases).
+
+    ``renames`` optionally supplies one array-rename map per program
+    (:func:`rename_uops`) so consecutive programs can share rows — the
+    cross-op fusion building block.  ``optimize_seams=True`` additionally
+    runs :func:`dedupe_const_stores` and :func:`eliminate_dead_writes`
+    (live set = ``outputs``) over the concatenated stream, removing the
+    redundant init copies and dead handoff rows a seam leaves behind.
+    """
     flat: list = []
-    for p in progs:
-        flat.extend(p.flatten())
+    for k, p in enumerate(progs):
+        ops = p.flatten()
+        if renames is not None and renames[k]:
+            ops = rename_uops(ops, renames[k])
+        flat.extend(ops)
+    if optimize_seams:
+        flat, _ = dedupe_const_stores(flat)
+        flat, _ = eliminate_dead_writes(flat, outputs)
     return UProgram(name=name, n_bits=n_bits, prologue=flat, body=[],
                     epilogue=[], body_reps=0, inputs=tuple(inputs),
                     outputs=tuple(outputs), scratch=tuple(scratch))

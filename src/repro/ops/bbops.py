@@ -27,6 +27,7 @@ paper's μProgram Memory/Scratchpad behavior.
 from __future__ import annotations
 
 import contextlib
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -35,10 +36,10 @@ from ..core.backends import (PerfStats, execute_lowered,  # noqa: F401
                              execute_program, list_backends,
                              set_default_backend, use_backend)
 from ..core.backends import timed as timed_execution
-from ..core.trace import compile_trace
+from ..core.trace import compile_chain_trace, compile_trace
 from ..core.uprogram import UProgram
 from ..simdram.layout import (LANE_WORD, BitplaneArray, from_bitplanes,
-                              to_bitplanes)
+                              note_elided_movement, to_bitplanes)
 from ..simdram.machine import current_machine
 
 
@@ -79,6 +80,10 @@ def values_of(planes: jax.Array, n: int, signed: bool = False) -> jax.Array:
 
 def _as_planes(x, n_bits: int) -> tuple[BitplaneArray, bool]:
     """(plane-resident operand, was-already-vertical)."""
+    if isinstance(x, _ChainValue):
+        if x.rec is _current_fusion() and x.n_bits == n_bits:
+            return x, True          # stays lazy inside its own fusion scope
+        x = x.materialize()
     if isinstance(x, BitplaneArray):
         if x.n_bits != n_bits:
             raise ValueError(f"operand is {x.n_bits}-bit, op wants {n_bits}")
@@ -115,6 +120,17 @@ def _run_op(name: str, operands: dict[str, BitplaneArray], n_bits: int,
     """
     ops = list(operands.values())
     _check_banks(ops)
+    rec = _current_fusion()
+    if (rec is not None and keep_planes and compiled is None
+            and out_bits is None and machine is None and backend is None
+            and all(isinstance(v, (BitplaneArray, _ChainValue))
+                    for v in operands.values())):
+        # fused-trace pipeline: record the op instead of executing it —
+        # the whole chain compiles to ONE LoweredTrace at flush time
+        return rec.record(name, operands, n_bits, signed_out, optimize)
+    operands = {k: (v.materialize() if isinstance(v, _ChainValue) else v)
+                for k, v in operands.items()}
+    ops = list(operands.values())
     m = machine if machine is not None else current_machine()
     if m is not None:
         prog, trace = compiled or m.memory.get(name, n_bits, optimize)
@@ -134,7 +150,7 @@ def _run_op(name: str, operands: dict[str, BitplaneArray], n_bits: int,
 
 
 def _fused(*xs) -> bool:
-    return any(isinstance(x, BitplaneArray) for x in xs)
+    return any(isinstance(x, (BitplaneArray, _ChainValue)) for x in xs)
 
 
 def _binary(name: str, a, b, n_bits: int, signed_out: bool = False,
@@ -255,6 +271,8 @@ def bbop_if_else(sel, a, b, n_bits: int = 8, optimize: bool = True,
     keep = _fused(sel, a, b)
     pa, _ = _as_planes(a, n_bits)
     pb, _ = _as_planes(b, n_bits)
+    if isinstance(sel, _ChainValue):
+        sel = sel.materialize()
     if isinstance(sel, BitplaneArray):
         ps = sel if sel.n_bits == 1 else sel.astype_bits(1)
     else:
@@ -262,6 +280,154 @@ def bbop_if_else(sel, a, b, n_bits: int = 8, optimize: bool = True,
     return _run_op("if_else", {"a": pa, "b": pb, "sel": ps}, n_bits,
                    optimize=optimize, backend=backend, keep_planes=keep,
                    machine=machine)
+
+
+# ---------------------------------------------------------------------------
+# Cross-op trace fusion (lazy recording inside simdram_pipeline)
+# ---------------------------------------------------------------------------
+
+# per-thread stack of active fusion recorders — innermost
+# ``simdram_pipeline(fused_trace=True)`` scope records the bbops run in it
+_FUSION = threading.local()
+
+
+def _fusion_stack() -> list:
+    st = getattr(_FUSION, "stack", None)
+    if st is None:
+        st = _FUSION.stack = []
+    return st
+
+
+def _current_fusion():
+    st = _fusion_stack()
+    return st[-1] if st else None
+
+
+class _ChainValue:
+    """The lazy output of an op recorded into a fused-trace pipeline.
+
+    Stands in for a :class:`BitplaneArray` inside its own fusion scope
+    (same layout metadata, so bank/length checks work unchanged) without
+    holding planes: the planes exist only after the recorder flushes the
+    whole chain as ONE fused :class:`~repro.core.trace.LoweredTrace`.
+    Leaving the scope — or any eager consumption (``store``, an
+    unfusible op, a different pipeline) — triggers the flush."""
+
+    def __init__(self, rec, op: str, operands: dict, n_bits: int,
+                 signed: bool) -> None:
+        self.rec = rec
+        self.op = op
+        self.operands = operands        # input name → BitplaneArray | lazy
+        self.n_bits = n_bits
+        self.signed = signed
+        self.name = f"v{rec.counter}"
+        rec.counter += 1
+        self._planes = None
+        probe = next(iter(operands.values()))
+        self.length = probe.length
+        self.words = probe.words
+        self.banked = probe.banked
+        self.n_banks = probe.n_banks
+
+    def materialize(self) -> BitplaneArray:
+        """Planes-in-hand value (flushes the pending chain if needed)."""
+        if self._planes is None:
+            self.rec.flush()
+        return BitplaneArray(self._planes, self.n_bits, self.length,
+                             self.signed)
+
+    @property
+    def planes(self):
+        return self.materialize().planes
+
+    def to_values(self, dtype=jnp.int32) -> jax.Array:
+        return self.materialize().to_values(dtype)
+
+
+class _FusionRecorder:
+    """Accumulates recorded ops and flushes them as one fused trace."""
+
+    def __init__(self, pipe) -> None:
+        self.pipe = pipe
+        self.pending: list[_ChainValue] = []
+        self.counter = 0
+        self.n_bits: int | None = None
+        self.optimize: bool | None = None
+        self.machine = None             # captured at pipeline __enter__
+
+    def record(self, op: str, operands: dict, n_bits: int, signed: bool,
+               optimize: bool) -> _ChainValue:
+        if self.pending and (self.n_bits != n_bits
+                             or self.optimize != optimize):
+            # a chain compiles at one element width / one optimize level;
+            # a switch seals the pending chain and starts a new one
+            self.flush()
+        self.n_bits, self.optimize = n_bits, optimize
+        w = _ChainValue(self, op, dict(operands), n_bits, signed)
+        self.pending.append(w)
+        return w
+
+    def _fetch_prog(self, op: str, n_bits: int, optimize: bool):
+        if self.machine is not None:
+            return self.machine.memory.get(op, n_bits, optimize)[0]
+        return compile_trace(op, n_bits, optimize)[0]
+
+    def flush(self) -> None:
+        """Compile the pending ops to ONE fused trace and execute it.
+
+        External operands (loaded planes, prior flushes' outputs) become
+        the chain's inputs, deduplicated by plane identity; every pending
+        value is a chain output (the user may store any of them).  Each
+        chain-internal operand reference is an inter-op relocation the
+        fused allocator elided — noted (never charged) through the
+        movement hooks so snapshots prove the hop delta."""
+        pending = [w for w in self.pending if w._planes is None]
+        self.pending = []
+        if not pending:
+            return
+        n_bits, optimize = self.n_bits, self.optimize
+        m = self.machine
+        ext: dict[int, tuple[str, object]] = {}   # id(planes) → (name, pl)
+
+        def ext_name(bpa: BitplaneArray) -> str:
+            key = id(bpa.planes)
+            hit = ext.get(key)
+            if hit is None:
+                hit = (f"in{len(ext)}", bpa.planes)
+                ext[key] = hit
+            return hit[0]
+
+        stages = []
+        n_internal_refs = 0
+        for w in pending:
+            prog = self._fetch_prog(w.op, n_bits, optimize)
+            names = tuple(dict.fromkeys(prog.inputs))
+            ins = []
+            for nm in names:
+                o = w.operands[nm]
+                if isinstance(o, _ChainValue) and o.rec is self \
+                        and o._planes is None:
+                    ins.append(o.name)
+                    n_internal_refs += 1
+                else:
+                    if isinstance(o, _ChainValue):
+                        o = o.materialize()
+                    ins.append(ext_name(o))
+            stages.append((w.op, tuple(ins), w.name))
+        out_names = tuple(w.name for w in pending)
+        if m is not None:
+            prog, trace = m.memory.get_chain(stages, n_bits, optimize,
+                                             outputs=out_names)
+        else:
+            prog, trace = compile_chain_trace(stages, n_bits, optimize,
+                                              outputs=out_names)
+        outs = execute_lowered(
+            prog, trace, {name: pl for name, pl in ext.values()},
+            backend=self.pipe.backend, machine=m)
+        for w in pending:
+            w._planes = outs[w.name]
+        for _ in range(n_internal_refs):
+            note_elided_movement(n_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -310,12 +476,26 @@ class simdram_pipeline(contextlib.AbstractContextManager):
     ``refresh_phase=True`` threads the replay clock through the refresh
     grid across ops (cross-op refresh phase) instead of anchoring every
     op's windows at its own t=0.
+
+    ``fused_trace=True`` turns the pipeline into a *fused-trace* pipeline:
+    bbops inside the scope record lazily instead of executing, and the
+    whole chain compiles (through the μProgram Memory's chain cache) to
+    ONE fused :class:`~repro.core.trace.LoweredTrace` — row allocation
+    re-run across op boundaries, so producer outputs land where consumers
+    want them and the inter-op LISA relocations the unfused pipeline pays
+    are elided (counted as ``elided`` hops in the movement snapshot,
+    charged nothing).  The fused trace executes once, at ``store`` of any
+    chain value or at scope exit, whichever comes first.  Ops a chain
+    cannot absorb (width-changing ops like ``bbop_greater``, explicit
+    per-call ``backend=``/``machine=``) run eagerly, sealing the pending
+    chain at that point.
     """
 
     def __init__(self, backend: str | None = None, banks: int | None = None,
                  timed: bool = False, perf_stats: PerfStats | None = None,
                  perf_model=None, model: str | None = None,
-                 refresh_phase: bool | None = None, machine=None):
+                 refresh_phase: bool | None = None, machine=None,
+                 fused_trace: bool = False):
         if model is not None and not isinstance(model, str):
             raise TypeError(
                 "model= selects the timing mode ('analytic' or 'replay'); "
@@ -335,6 +515,7 @@ class simdram_pipeline(contextlib.AbstractContextManager):
             "replay" if refresh_phase is not None else None)
         self._refresh_phase = refresh_phase
         self._machine = machine
+        self._fusion = _FusionRecorder(self) if fused_trace else None
         self._ctx = None
         self._tctx = None
         self._mctx = None
@@ -374,9 +555,23 @@ class simdram_pipeline(contextlib.AbstractContextManager):
                 self._mctx.__exit__(None, None, None)
                 self._mctx = None
             raise
+        if self._fusion is not None:
+            self._fusion.machine = self._machine if self._machine is not None \
+                else current_machine()
+            _fusion_stack().append(self._fusion)
         return self
 
     def __exit__(self, *exc):
+        if self._fusion is not None:
+            st = _fusion_stack()
+            if self._fusion in st:
+                st.remove(self._fusion)
+            if exc[0] is None:
+                # seal the chain while the backend/timed/machine scopes
+                # are still open: ONE fused trace executes here
+                self._fusion.flush()
+            else:
+                self._fusion.pending = []
         if self._tctx is not None:
             self._tctx.__exit__(*exc)
         if self._ctx is not None:
@@ -431,6 +626,8 @@ class simdram_pipeline(contextlib.AbstractContextManager):
         """Plane-resident result(s) → horizontal, in one reverse pass when
         the results share a layout (width/bits/length/signedness); mixed
         layouts fall back to one pass per result."""
+        results = tuple(r.materialize() if isinstance(r, _ChainValue) else r
+                        for r in results)
         if len(results) == 1:
             return results[0].to_values()
         # stack along the bank axis so the reverse pass is also single

@@ -94,6 +94,16 @@ def _fire_movement(kind: str, n_rows: int, banks: int | None = None,
         hook(kind, n_rows, banks, planes)
 
 
+def note_elided_movement(n_rows: int, banks: int | None = None) -> None:
+    """Report an inter-op row relocation that cross-op trace fusion made
+    unnecessary: the fused chain's allocator placed a producer's output
+    rows where the consumer wants its input, so the LISA hop the unfused
+    pipeline would pay never happens.  Fires the movement hooks with
+    ``kind="elided"`` — observers count it (so fused-vs-unfused hop deltas
+    are provable from one snapshot) but charge nothing."""
+    _fire_movement("elided", n_rows, banks)
+
+
 def reset_transpose_stats() -> None:
     TRANSPOSE_STATS["to_bitplanes"] = 0
     TRANSPOSE_STATS["from_bitplanes"] = 0

@@ -387,6 +387,11 @@ class SimdramMachine:
             build_graph(g)
             if not g.outputs:
                 raise ValueError(f"{name!r}: build_graph declared no outputs")
+            if verify:
+                # pre-synthesis graph lint: malformed user AOIGs fail here
+                # with a graph diagnostic, not deep inside Step-1 synthesis
+                from ..core.tracelint import lint_graph
+                lint_graph(g, name=name).raise_for_errors()
             if validate:
                 from ..core.synthesis import check_synthesis
                 check_synthesis(g, name=name)
@@ -422,6 +427,62 @@ class SimdramMachine:
                 trace.lint().raise_for_errors()
             except TraceLintError:
                 # reject at registration: a broken op must not stay callable
+                self._unregister(name)
+                raise
+        return self.op(name)
+
+    def define_chain(self, name: str, stages, *, outputs=None,
+                     verify: bool | int = True,
+                     override: bool = False) -> BoundOp:
+        """Register a fused cross-op pipeline as a first-class operation.
+
+        ``stages`` is a sequence of :class:`~repro.core.compiler.ChainStage`
+        (or ``(op, inputs, output)`` tuples) in SSA form; each stage's op
+        resolves through this machine, so user-defined ops fuse like
+        built-ins and a stage may itself name another registered chain.
+        The whole pipeline compiles to ONE μProgram / one
+        :class:`~repro.core.trace.LoweredTrace` per width (see
+        :func:`~repro.core.compiler.compile_chain`) — producer output rows
+        are allocated where the consumer reads them, so no inter-op
+        movement remains at the seams — and the machine treats it exactly
+        like any other op: ``m.op(name)(...)`` executes it, and
+        :meth:`submit` / :meth:`drain` schedule it as a SINGLE FR-FCFS
+        request (one atomic unit on one bank set, never interleaved
+        per-op; the future resolves the chain's first output).  The
+        μProgram Memory keys it like any op, but the trace's
+        ``chain.ops`` make :meth:`TraceCache.invalidate` of ANY
+        constituent op evict it.
+
+        ``verify`` probe-compiles the fused trace (width 8, or pass
+        ``verify=<n_bits>``) and statically lints it — including the
+        chain seam checks — rolling the registration back on any error.
+        """
+        from ..core.compiler import _as_stage, compile_chain
+        norm = tuple(_as_stage(s) for s in stages)
+        if not norm:
+            raise ValueError(f"{name!r}: define_chain needs >= 1 stage")
+        if any(st.op == name for st in norm):
+            raise ValueError(f"{name!r}: a chain cannot name itself as a "
+                             "stage op")
+        chain_outs = tuple(outputs) if outputs is not None else None
+
+        def compile_fn(n_bits, optimize=True, _stages=norm,
+                       _outs=chain_outs, _name=name):
+            return compile_chain(_stages, n_bits, optimize=optimize,
+                                 compile_fn=self._compile, outputs=_outs,
+                                 name=_name)
+
+        self._register(name, compile_fn, override=override)
+        if verify:
+            from ..core.trace import lower_program
+            probe_bits = 8 if verify is True else int(verify)
+            try:
+                # probe outside the μProgram Memory, like define_op: a
+                # broken chain (unknown stage op, arity mismatch, lint
+                # errors) must not stay callable
+                trace = lower_program(self._compile(name, probe_bits, True))
+                trace.lint().raise_for_errors()
+            except Exception:
                 self._unregister(name)
                 raise
         return self.op(name)

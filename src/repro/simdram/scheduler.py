@@ -92,6 +92,9 @@ class RequestTiming:
     n_seqs: int = 0
     lanes: int = 0
     stream_finish_ns: tuple[float, ...] = ()
+    # (op, n_seqs) per constituent stage when the request's trace is a
+    # fused chain — one FR-FCFS unit, but per-op attribution survives
+    fused_stages: tuple[tuple[str, int], ...] = ()
 
     @property
     def queue_ns(self) -> float:
@@ -102,6 +105,22 @@ class RequestTiming:
     def service_ns(self) -> float:
         """First activation → final precharge complete."""
         return self.finish_ns - self.start_ns
+
+    def stage_split(self) -> dict[str, float]:
+        """Service time attributed per constituent op.
+
+        A fused chain scheduled as one request still reports per-op
+        timing: ``service_ns`` split proportionally by each stage's share
+        of command sequences (the replay-gap structure makes sequence
+        count the first-order cost driver).  Unfused requests map their
+        whole service time to their own name."""
+        if not self.fused_stages:
+            return {self.name: self.service_ns}
+        total = max(1, sum(n for _, n in self.fused_stages))
+        out: dict[str, float] = {}
+        for op, n in self.fused_stages:
+            out[op] = out.get(op, 0.0) + self.service_ns * n / total
+        return out
 
     def replay_result(self) -> ReplayResult:
         """This request's timing as a :class:`ReplayResult` — the same
@@ -178,10 +197,10 @@ class _Request:
 
     __slots__ = ("name", "tenant", "kinds", "analytic", "lanes", "bank_ids",
                  "arrival", "first_act", "finishes", "streams_left",
-                 "tfaw", "refresh", "n_ref", "restarts", "acts")
+                 "tfaw", "refresh", "n_ref", "restarts", "acts", "fused")
 
     def __init__(self, name, tenant, kinds, analytic, lanes, bank_ids,
-                 arrival) -> None:
+                 arrival, fused=()) -> None:
         self.name = name
         self.tenant = tenant
         self.kinds = kinds
@@ -197,6 +216,7 @@ class _Request:
         self.n_ref = 0
         self.restarts = 0
         self.acts = 0
+        self.fused = fused
 
 
 class BankScheduler:
@@ -319,8 +339,14 @@ class BankScheduler:
         base = max(0, math.ceil(arrival_ns / tck))
         arrivals = [base] * banks if offsets_ns is None else \
             [max(base, math.ceil(o / tck)) for o in offsets_ns]
+        # a fused chain trace enqueues as ONE request — a single FR-FCFS
+        # unit — but carries its per-stage seq spans so RequestTiming can
+        # still attribute service time per constituent op
+        chain = getattr(trace, "chain", None)
+        fused = tuple((s.op, s.seq_end - s.seq_start)
+                      for s in getattr(chain, "stages", ()) or ())
         req = _Request(name, tenant, kinds, analytic, int(lanes), bank_ids,
-                       min(arrivals) if arrivals else base)
+                       min(arrivals) if arrivals else base, fused=fused)
         self._requests.append(req)
         if not kinds:
             # empty trace: completes on arrival, engages no bank
@@ -477,7 +503,8 @@ class BankScheduler:
                 n_refresh_stalls=req.n_ref, n_restarts=req.restarts,
                 n_acts=req.acts, n_seqs=len(req.kinds) * len(req.bank_ids),
                 lanes=req.lanes,
-                stream_finish_ns=tuple(f * tck for f in finishes)))
+                stream_finish_ns=tuple(f * tck for f in finishes),
+                fused_stages=req.fused))
         cycles = max((max(r.finishes) for r in requests if r.finishes),
                      default=0)
         result = ScheduleResult(

@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.tools.tracelint [--bits 4,8,16,32]
                                                    [--ops add,mul,...]
                                                    [--optimize on|off|both]
+                                                   [--chains]
 
 Compiles each (operation, n_bits, optimize) key, runs the static verifier
 (:mod:`repro.core.tracelint`) on the lowered trace and prints one line per
@@ -10,6 +11,10 @@ key; any lint *error* (or a compile failure) fails the sweep with a
 non-zero exit.  This is the CI lint gate over the op registry — the same
 checks ``compile_trace(..., verify=True)`` applies inline, but exhaustively
 and with the full report rendered.
+
+``--chains`` additionally sweeps a set of representative fused chain
+traces (:func:`repro.core.compiler.fuse_chain`) through the same verifier
+— including the fused-only cross-op seam checks (``seam-clobber``).
 """
 from __future__ import annotations
 
@@ -61,6 +66,72 @@ def sweep(ops: tuple[str, ...], bits: tuple[int, ...],
     return failed
 
 
+# representative fused pipelines: linear chains, a diamond (one producer
+# feeding two consumers), reductions into arithmetic, and a long 8-op mix
+CHAIN_CASES: dict[str, tuple] = {
+    "fma": (("addition", ("a", "b"), "t0"),
+            ("multiplication", ("t0", "a"), "t1")),
+    "fma_relu": (("addition", ("a", "b"), "t0"),
+                 ("multiplication", ("t0", "a"), "t1"),
+                 ("relu", ("t1",), "t2")),
+    "diamond": (("addition", ("a", "b"), "t0"),
+                ("relu", ("t0",), "t1"),
+                ("abs", ("t0",), "t2"),
+                ("subtraction", ("t1", "t2"), "t3")),
+    "minmax": (("maximum", ("a", "b"), "hi"),
+               ("minimum", ("a", "b"), "lo"),
+               ("subtraction", ("hi", "lo"), "range")),
+    "xor_acc": (("xor_reduction", ("a", "b", "c"), "t0"),
+                ("addition", ("t0", "a"), "t1")),
+    "chain8": (("addition", ("a", "b"), "t0"),
+               ("multiplication", ("t0", "a"), "t1"),
+               ("subtraction", ("t1", "b"), "t2"),
+               ("relu", ("t2",), "t3"),
+               ("addition", ("t3", "a"), "t4"),
+               ("abs", ("t4",), "t5"),
+               ("subtraction", ("t5", "b"), "t6"),
+               ("relu", ("t6",), "t7")),
+}
+
+
+def sweep_chains(bits: tuple[int, ...], optimizes: tuple[bool, ...],
+                 verbose: bool = False) -> int:
+    """Lint every representative fused chain × bit width; returns the
+    number of keys with lint errors or compile failures."""
+    from ..core.compiler import fuse_chain
+
+    failed = 0
+    n_warn = 0
+    t0 = time.perf_counter()
+    for cname, stages in CHAIN_CASES.items():
+        for n_bits in bits:
+            for optimize in optimizes:
+                key = (f"chain:{cname}/{n_bits}b"
+                       + ("" if optimize else "/ambit"))
+                try:
+                    trace = fuse_chain(stages, n_bits, optimize)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    print(f"FAIL  {key}: compile error: {e}")
+                    failed += 1
+                    continue
+                report = trace.lint()
+                n_warn += len(report.warnings)
+                if not report.ok:
+                    failed += 1
+                    print(f"FAIL  {key}")
+                    print("      " + report.render().replace("\n", "\n      "))
+                elif verbose:
+                    ch = trace.chain
+                    print(f"ok    {key}  ({trace.cmds.shape[0]} cmds, "
+                          f"{ch.n_stages} stages, "
+                          f"{ch.elided_rows} rows elided)")
+    dt = time.perf_counter() - t0
+    n_keys = len(CHAIN_CASES) * len(bits) * len(optimizes)
+    print(f"tracelint --chains: {n_keys} fused trace(s) checked in "
+          f"{dt:.1f}s — {failed} failing, {n_warn} warning(s)")
+    return failed
+
+
 def main(argv: list[str] | None = None) -> int:
     from ..core.circuits import list_operations
 
@@ -77,6 +148,9 @@ def main(argv: list[str] | None = None) -> int:
                     default="on",
                     help="MIG optimization: on (default), off (the Ambit "
                          "baseline lowering) or both")
+    ap.add_argument("--chains", action="store_true",
+                    help="also lint representative fused chain traces "
+                         "(cross-op seam checks)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="print per-key ok lines and warning reports")
     args = ap.parse_args(argv)
@@ -90,7 +164,10 @@ def main(argv: list[str] | None = None) -> int:
     bits = tuple(int(b) for b in args.bits.split(",") if b)
     optimizes = {"on": (True,), "off": (False,),
                  "both": (True, False)}[args.optimize]
-    return 1 if sweep(ops, bits, optimizes, verbose=args.verbose) else 0
+    failed = sweep(ops, bits, optimizes, verbose=args.verbose)
+    if args.chains:
+        failed += sweep_chains(bits, optimizes, verbose=args.verbose)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

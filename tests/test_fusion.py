@@ -1,0 +1,468 @@
+"""Cross-op trace fusion: whole pipelines compiled to ONE LoweredTrace.
+
+Covers the compiler chain pass (``compile_chain``/``fuse_chain``), the
+chain-aware TraceCache (signature keys + invalidation), seam lint for
+fused traces, the ``fused_trace=True`` pipeline recorder, scheduling of
+fused chains as single FR-FCFS units, and the fused-vs-unfused parity /
+movement-elision / replay-latency claims."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.circuits import (compile_operation, register_operation,
+                                 unregister_operation)
+from repro.core.circuits import rebase
+from repro.core.compiler import (ChainStage, chain_signature, compile_chain,
+                                 fuse_chain)
+from repro.core.trace import (CMD_COPY, GLOBAL_TRACE_CACHE, TraceCache,
+                              canonical_uops, compile_chain_trace,
+                              lower_program)
+from repro.core.tracelint import lint_graph
+from repro.core.graph import LogicGraph
+from repro.core.uprogram import concat_programs
+from repro.ops import (bbop_abs, bbop_add, bbop_greater, bbop_if_else,
+                       bbop_mul, bbop_relu, bbop_sub, simdram_pipeline)
+from repro.simdram.machine import SimdramMachine
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+RNG = np.random.default_rng(0xF05E)
+N = 96
+
+STAGES_3 = (("addition", ("a", "b"), "v0"),
+            ("subtraction", ("v0", "a"), "v1"),
+            ("relu", ("v1",), "v2"))
+
+
+def _chain_fn(a, b, n_bits, with_mul=True):
+    x = bbop_add(a, b, n_bits)
+    if with_mul:
+        x = bbop_mul(x, a, n_bits)
+    x = bbop_sub(x, b, n_bits)
+    return bbop_relu(x, n_bits)
+
+
+# ---------------------------------------------------------------------------
+# fused ≡ unfused parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "unrolled", "pallas"])
+@pytest.mark.parametrize("banked", [False, True])
+@pytest.mark.parametrize("n_bits", [4, 8, 16])
+def test_fused_matches_unfused(backend, banked, n_bits):
+    """The fused single-trace pipeline is bit-exact against the per-op
+    pipeline on every backend × bankedness × element width."""
+    hi = 1 << n_bits
+    shape = (2, 64) if banked else (N,)
+    av = jnp.asarray(RNG.integers(0, hi, shape), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, hi, shape), jnp.int32)
+    with_mul = n_bits <= 8               # cap trace size at wide widths
+    outs = []
+    for fused in (False, True):
+        with simdram_pipeline(backend=backend,
+                              banks=2 if banked else None,
+                              fused_trace=fused) as p:
+            a, b = p.load([av, bv], n_bits)
+            outs.append(np.asarray(p.store(_chain_fn(a, b, n_bits,
+                                                     with_mul))))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+@pytest.mark.parametrize("k", [2, 3, 4, 5, 6, 7, 8])
+def test_chain_lengths_parity(k):
+    """2- through 8-op chains: fused output equals unfused output."""
+    av = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    steps = [lambda x, a, b: bbop_add(x, b, 8),
+             lambda x, a, b: bbop_sub(x, b, 8),
+             lambda x, a, b: bbop_relu(x, 8),
+             lambda x, a, b: bbop_abs(x, 8),
+             lambda x, a, b: bbop_mul(x, a, 8)]
+    outs = []
+    for fused in (False, True):
+        with simdram_pipeline(fused_trace=fused) as p:
+            a, b = p.load([av, bv], 8)
+            x = a
+            for i in range(k):
+                x = steps[i % len(steps)](x, a, b)
+            outs.append(np.asarray(p.store(x)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def _random_chain_case(rng):
+    n_bits = int(rng.choice([4, 8]))
+    hi = 1 << n_bits
+    av = jnp.asarray(rng.integers(0, hi, 64), jnp.int32)
+    bv = jnp.asarray(rng.integers(0, hi, 64), jnp.int32)
+    k = int(rng.integers(2, 7))
+    picks = rng.integers(0, 5, k)
+    u_pick = rng.integers(0, 1 << 30, k)       # mod live value count at use
+    v_pick = rng.integers(0, 1 << 30, k)
+    outs = []
+    for fused in (False, True):
+        with simdram_pipeline(fused_trace=fused) as p:
+            a, b = p.load([av, bv], n_bits)
+            vals = [a, b]
+            for i, which in enumerate(picks):
+                u = vals[int(u_pick[i]) % len(vals)]
+                v = vals[int(v_pick[i]) % len(vals)]
+                x = [lambda: bbop_add(u, v, n_bits),
+                     lambda: bbop_sub(u, v, n_bits),
+                     lambda: bbop_mul(u, v, n_bits),
+                     lambda: bbop_relu(u, n_bits),
+                     lambda: bbop_abs(u, n_bits)][int(which)]()
+                vals.append(x)
+            outs.append(np.asarray(p.store(vals[-1])))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(hst.integers(0, 2 ** 32 - 1))
+    def test_random_chain_sweep(seed):
+        """Hypothesis sweep: random DAG-shaped chains stay bit-exact."""
+        _random_chain_case(np.random.default_rng(seed))
+else:                                                  # pragma: no cover
+    @pytest.mark.parametrize("seed", range(12))
+    def test_random_chain_sweep(seed):
+        """Seeded sweep (hypothesis unavailable): random chains stay
+        bit-exact."""
+        _random_chain_case(np.random.default_rng(seed))
+
+
+# ---------------------------------------------------------------------------
+# compiler + IR
+# ---------------------------------------------------------------------------
+
+
+def test_ir_roundtrip_decode():
+    """decode(fused trace) reproduces the chain μProgram's canonical μOps,
+    and the seam metadata tiles the whole trace."""
+    trace = fuse_chain(STAGES_3, 8)
+    prog = compile_chain(STAGES_3, 8)
+    assert trace.decode() == canonical_uops(prog)
+    chain = trace.chain
+    assert chain is not None and chain.n_stages == 3
+    assert chain.ops == ("addition", "subtraction", "relu")
+    assert chain.stages[0].seq_start == 0
+    for prev, cur in zip(chain.stages, chain.stages[1:]):
+        assert cur.seq_start == prev.seq_end
+    assert chain.stages[-1].seq_end == len(trace.seqs)
+    assert chain.elided_rows > 0
+
+
+def test_fused_trace_lints_clean():
+    report = fuse_chain(STAGES_3, 8).lint()
+    assert not report.errors
+
+
+def test_chain_allocation_reuses_rows():
+    """The fused allocator shares rows across op boundaries: the fused
+    trace needs fewer D-rows than the constituent ops summed."""
+    trace = fuse_chain(STAGES_3, 8)
+    per_op = sum(len(lower_program(compile_operation(op, 8)).d_rows)
+                 for op in ("addition", "subtraction", "relu"))
+    assert len(trace.d_rows) < per_op
+    assert trace.chain.elided_rows == per_op - len(trace.d_rows)
+
+
+def test_compile_chain_validation():
+    with pytest.raises(ValueError, match="at least one stage"):
+        compile_chain([], 8)
+    with pytest.raises(ValueError, match="redefin"):
+        compile_chain([("addition", ("a", "b"), "v0"),
+                       ("relu", ("v0",), "v0")], 8)
+    with pytest.raises(ValueError, match="2 operand"):
+        compile_chain([("addition", ("a",), "v0")], 8)
+    with pytest.raises(ValueError, match="not produced by any stage"):
+        compile_chain(STAGES_3, 8, outputs=("nope",))
+
+
+def test_chain_signature_and_stage_coercion():
+    sig = chain_signature([ChainStage("relu", ("a",), "v0")])
+    assert sig == chain_signature([("relu", "a", "v0")])
+    assert sig.startswith("chain:")
+    assert chain_signature(STAGES_3, outputs=("v2",)) != \
+        chain_signature(STAGES_3)
+
+
+# ---------------------------------------------------------------------------
+# TraceCache: chain keys + invalidation (the bugfix regression)
+# ---------------------------------------------------------------------------
+
+
+def test_chain_cache_hits_on_signature():
+    cache = TraceCache(capacity=8)
+    p1, t1 = cache.get_chain(STAGES_3, 8)
+    h0 = cache._hits
+    p2, t2 = cache.get_chain(list(STAGES_3), 8)       # same signature
+    assert t1 is t2 and p1 is p2
+    assert cache._hits == h0 + 1
+    _, t3 = cache.get_chain(STAGES_3, 8, outputs=("v0", "v2"))
+    assert t3 is not t1                                # distinct key
+    assert t3.outputs == ("v0", "v2")
+
+
+def _compile_twiceadd(n_bits, optimize=True):
+    p1 = rebase(compile_operation("addition", n_bits, optimize), {},
+                {"out": "_s"})
+    p2 = rebase(compile_operation("addition", n_bits, optimize), {},
+                {"a": "_s", "out": "out"})
+    return concat_programs("twiceadd", [p1, p2], n_bits,
+                           inputs=("a", "b"), outputs=("out",),
+                           scratch=("_s",))
+
+
+def test_invalidate_evicts_stale_chain_entries_everywhere():
+    """Redefining/unregistering an op must evict every fused chain entry
+    whose signature references it — in EVERY live cache, including
+    entries keyed by chain signature rather than by the op's own name."""
+    register_operation("twiceadd", _compile_twiceadd)
+    try:
+        stages = [("twiceadd", ("a", "b"), "t0"), ("relu", ("t0",), "t1")]
+        other = TraceCache(capacity=8)
+        compile_chain_trace(stages, 8)                 # global cache
+        other.get_chain(stages, 8)
+        assert any("twiceadd" in k[0] for k in GLOBAL_TRACE_CACHE._entries)
+        assert any("twiceadd" in k[0] for k in other._entries)
+        register_operation("twiceadd", _compile_twiceadd, override=True)
+        for cache in (GLOBAL_TRACE_CACHE, other):
+            assert not any("twiceadd" in k[0] for k in cache._entries), \
+                "stale fused chain survived op redefinition"
+    finally:
+        unregister_operation("twiceadd")
+
+
+def test_machine_redefine_evicts_named_chain():
+    """A machine-registered chain caches under its own name but still
+    references its constituent ops: redefining one evicts it."""
+    def build_xor(g):
+        g.add_output("out", g.gate_xor(g.input("a"), g.input("b")))
+
+    def build_and(g):
+        g.add_output("out", g.gate_and(g.input("a"), g.input("b")))
+
+    m = SimdramMachine(backend="unrolled")
+    m.define_op("xorish", build_xor)
+    chain = m.define_chain("xchain", [("xorish", ("a", "b"), "t0"),
+                                      ("xorish", ("t0", "b"), "t1")])
+    a = jnp.full((32,), 6, jnp.int32)
+    b = jnp.full((32,), 3, jnp.int32)
+    out = np.asarray(chain(a, b, n_bits=8))
+    np.testing.assert_array_equal(out, (6 ^ 3) ^ 3)    # xor∘xor
+    assert any(getattr(t.chain, "ops", None) == ("xorish",)
+               for _p, t in m.memory._entries.values())
+    m.define_op("xorish", build_and, override=True)
+    assert not any(getattr(t.chain, "ops", None) == ("xorish",)
+                   for _p, t in m.memory._entries.values()), \
+        "stale fused chain survived machine op redefinition"
+    out2 = np.asarray(chain(a, b, n_bits=8))
+    np.testing.assert_array_equal(out2, (6 & 3) & 3)   # and∘and now
+
+
+# ---------------------------------------------------------------------------
+# TraceLint: seams + user graphs
+# ---------------------------------------------------------------------------
+
+
+def test_seam_clobber_diagnostic():
+    """A stage overwriting another stage's still-live value rows is a
+    seam-clobber error on the fused trace."""
+    prog, trace = compile_chain_trace(
+        [("addition", ("a", "b"), "v0"),
+         ("subtraction", ("v0", "a"), "v1")], 4, outputs=("v0", "v1"))
+    assert not trace.lint().errors
+    row = trace.row_index[("v0", 0)]
+    s1 = trace.chain.stages[1]
+    cmds = np.array(trace.cmds, copy=True)
+    target = next(i for i in range(s1.cmd_start, s1.cmd_end)
+                  if cmds[i, 0] == CMD_COPY and abs(int(cmds[i, 1])) != row)
+    cmds[target, 1] = row                              # clobber v0's bit 0
+    bad = dataclasses.replace(trace, cmds=cmds, _lint=None,
+                              _fingerprint=None, _decoded=None,
+                              _act_struct=None)
+    codes = {d.kind for d in bad.lint().errors}
+    assert "seam-clobber" in codes
+
+
+def test_lint_graph_diagnostics():
+    g = LogicGraph()
+    g.input("a")
+    assert any(d.kind == "graph-no-outputs"
+               for d in lint_graph(g).errors)
+
+    g2 = LogicGraph()
+    x = g2.gate_and(g2.input("a"), g2.input("b"))
+    g2.add_output("out", x)
+    rep = lint_graph(g2)
+    assert not rep.errors
+
+    g3 = LogicGraph()
+    a3 = g3.input("a")
+    g3.input("unused")
+    g3.add_output("out", a3)
+    rep3 = lint_graph(g3)
+    assert not rep3.errors
+    assert any(d.kind == "graph-unused-input" for d in rep3.diagnostics)
+
+    g4 = LogicGraph()
+    a4 = g4.input("a")
+    g4.add_output("out", a4)
+    g4.outputs.append(("out", a4))                     # duplicate name
+    assert any(d.kind == "graph-dup-output"
+               for d in lint_graph(g4).errors)
+
+    g5 = LogicGraph()
+    g5.add_output("out", 9999)                         # dangling literal
+    assert any(d.kind == "graph-bad-literal"
+               for d in lint_graph(g5).errors)
+
+
+def test_define_op_lints_user_graph():
+    m = SimdramMachine()
+    with pytest.raises(Exception, match="graph-bad-literal"):
+        m.define_op("dangling", lambda g: g.add_output("out", 9999))
+
+
+# ---------------------------------------------------------------------------
+# machine: define_chain + scheduling as one FR-FCFS unit
+# ---------------------------------------------------------------------------
+
+
+def test_define_chain_validation():
+    m = SimdramMachine()
+    with pytest.raises(ValueError, match=">= 1 stage"):
+        m.define_chain("empty", [])
+    with pytest.raises(ValueError, match="itself"):
+        m.define_chain("loop", [("loop", ("a",), "t0")])
+
+
+def test_define_chain_submit_drain_single_request():
+    m = SimdramMachine(backend="unrolled")
+    m.define_chain("fma_relu", [("addition", ("a", "b"), "t0"),
+                                ("multiplication", ("t0", "a"), "t1"),
+                                ("relu", ("t1",), "t2")])
+    av = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, 256, 64), jnp.int32)
+    an, bn = np.asarray(av), np.asarray(bv)
+    t1 = (((an + bn) & 255) * an) & 255
+    ref = np.where(t1 < 128, t1, 0)
+
+    fut = m.submit("fma_relu", av, bv, n_bits=8)
+    sched = m.drain()
+    assert sched.n_requests == 1                      # ONE FR-FCFS unit
+    r = sched.requests[0]
+    assert [op for op, _ in r.fused_stages] == \
+        ["addition", "multiplication", "relu"]
+    assert all(n > 0 for _, n in r.fused_stages)
+    assert sum(r.stage_split().values()) == pytest.approx(r.service_ns)
+    np.testing.assert_array_equal(np.asarray(fut.result()), ref)
+
+    # unfused submissions of the same ops schedule as three requests
+    m.submit("addition", av, bv, n_bits=8)
+    m.submit("multiplication", av, av, n_bits=8)
+    m.submit("relu", av, n_bits=8)
+    sched3 = m.drain()
+    assert sched3.n_requests == 3
+    assert all(not r.fused_stages for r in sched3.requests)
+    r0 = sched3.requests[0]
+    assert r0.stage_split() == {r0.name: r0.service_ns}
+
+
+# ---------------------------------------------------------------------------
+# movement elision + replay latency (the provable wins)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_pipeline_elides_movement_hops():
+    av = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    stats = {}
+    for fused in (False, True):
+        with simdram_pipeline(timed=True, fused_trace=fused) as p:
+            a, b = p.load([av, bv], 8)
+            p.store(_chain_fn(a, b, 8))
+        stats[fused] = p.stats
+    unf, fus = stats[False], stats[True]
+    assert unf.n_moves_intra == 3          # one hop per chained operand
+    assert fus.n_moves_intra == 0          # the fused allocator elided all
+    assert fus.n_moves_elided == unf.n_moves_intra
+    assert fus.movement_intra_ns == 0.0
+    snap = fus.snapshot()
+    assert snap["movement"]["per_kind"]["elided"]["n"] == 3
+    assert fus.n_programs == 1 and unf.n_programs == 4
+    # per-op attribution survives fusion: one row per constituent op
+    assert set(fus.per_op) == set(unf.per_op)
+    assert sum(d["ns"] for d in fus.per_op.values()) == \
+        pytest.approx(fus.exec_ns)
+
+
+def test_fused_replay_not_worse_than_unfused():
+    """Replayed latency of the fused trace ≤ the phase-threaded unfused
+    chain (the boundary tRC gap replaces each op's trailing tRAS+tRP)."""
+    av = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    replay = {}
+    for fused in (False, True):
+        with simdram_pipeline(model="replay", refresh_phase=True,
+                              fused_trace=fused) as p:
+            a, b = p.load([av, bv], 8)
+            p.store(_chain_fn(a, b, 8))
+        replay[fused] = p.stats.replay_ns
+    assert replay[True] <= replay[False] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# recorder edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_fused_pipeline_seals_on_unfusible_op():
+    """A width-changing op (greater → 1 bit) runs eagerly, sealing the
+    pending chain; the overall result stays exact."""
+    av = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    outs = []
+    for fused in (False, True):
+        with simdram_pipeline(fused_trace=fused) as p:
+            a, b = p.load([av, bv], 8)
+            s = bbop_add(a, b, 8)
+            sel = bbop_greater(s, a, 8)                # out_bits=1: eager
+            outs.append(np.asarray(p.store(
+                bbop_if_else(sel, s, b, 8))))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_fused_pipeline_multiple_stored_values():
+    """Every recorded value is retrievable — intermediates included."""
+    av = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, 256, N), jnp.int32)
+    with simdram_pipeline(fused_trace=True) as p:
+        a, b = p.load([av, bv], 8)
+        x = bbop_add(a, b, 8)
+        y = bbop_mul(x, a, 8)
+        rx, ry = p.store(x, y)
+    an, bn = np.asarray(av), np.asarray(bv)
+    np.testing.assert_array_equal(np.asarray(rx), (an + bn) & 255)
+    np.testing.assert_array_equal(np.asarray(ry),
+                                  (((an + bn) & 255) * an) & 255)
+
+
+def test_fused_pipeline_banked_chain():
+    av = jnp.asarray(RNG.integers(0, 256, (4, 64)), jnp.int32)
+    bv = jnp.asarray(RNG.integers(0, 256, (4, 64)), jnp.int32)
+    outs = []
+    for fused in (False, True):
+        with simdram_pipeline(banks=4, fused_trace=fused) as p:
+            a, b = p.load([av, bv], 8)
+            outs.append(np.asarray(p.store(_chain_fn(a, b, 8))))
+    np.testing.assert_array_equal(outs[0], outs[1])

@@ -357,7 +357,8 @@ def test_snapshot_is_structured_and_json_safe():
                          "tenants"}
     assert snap["totals"]["ns"] == pytest.approx(m.stats.total_ns)
     assert snap["execute"]["n_programs"] == 1
-    assert snap["movement"]["per_kind"].keys() == {"intra", "inter"}
+    assert snap["movement"]["per_kind"].keys() == {"intra", "inter",
+                                                   "elided"}
     assert snap["transposition"]["per_kind"].keys() == {"to", "from"}
     assert snap["replay"]["ns"] == pytest.approx(m.stats.replay_ns)
     assert "addition/8b" in snap["per_op"]
