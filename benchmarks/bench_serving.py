@@ -1,0 +1,81 @@
+"""Serving-layer benchmark: continuous-batching decode over a pool of
+bank-sharded SIMDRAM machines (the PR-10 tentpole), gated in --smoke.
+
+Rows
+----
+* ``serve/batched`` — the headline gate: aggregate modeled tokens/s with
+  N concurrent users continuously batched into the bank axis vs the same
+  sessions served one at a time (``serve_batched_tokens_per_s >=
+  serve_sequential_tokens_per_s``; bank-level packing of independent
+  decode steps cannot lower throughput).
+* ``serve/p99`` — the SLO surface: modeled p50/p99 ns-per-token and
+  time-to-first-token percentiles at N users (finite, ``serve_p99_ns >=
+  serve_p50_ns`` by construction of a percentile).
+* ``serve/memo`` — the whole-schedule memo at work: a steady-state
+  decode loop's repeated busy periods must mostly hit
+  (``sched_memo_hit_rate``), which is what keeps the serving loop from
+  re-stepping the scheduler event loop per session per step.
+
+All throughput/latency values are modeled ns (deterministic); the
+``us_per_call`` column is the host wall time of the serving loop.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.serve import SimdramServer
+
+from .common import row
+
+MIX = ["qwen1_5_0_5b", "mamba2_130m", "whisper_large_v3", "olmoe_1b_7b"]
+
+
+def _spawn(server: SimdramServer, users: int, tokens: int) -> None:
+    for u in range(users):
+        server.submit_session(MIX[u % len(MIX)], n_tokens=tokens,
+                              arrival_ns=u * 200.0, seed=u)
+
+
+def main(smoke: bool = False) -> None:
+    users = 8
+    machines = 2
+    banks = 8
+    tokens = 4 if smoke else 8
+
+    batched = SimdramServer(n_machines=machines, n_banks=banks)
+    _spawn(batched, users, tokens)
+    t0 = time.perf_counter()
+    stats = batched.run()
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    # sequential baseline: the same sessions (same seeds, same work),
+    # each served alone — total tokens over the summed solo spans
+    seq_span = 0.0
+    for u in range(users):
+        solo = SimdramServer(n_machines=1, n_banks=banks)
+        solo.submit_session(MIX[u % len(MIX)], n_tokens=tokens, seed=u)
+        seq_span += solo.run().span_ns
+    seq_tps = stats.total_tokens / seq_span * 1e9
+
+    row(f"serve/batched/u{users}m{machines}", wall_us,
+        f"serve_batched_tokens_per_s={stats.tokens_per_s:.1f} "
+        f"serve_sequential_tokens_per_s={seq_tps:.1f} "
+        f"users={users} machines={machines} banks={banks} "
+        f"tokens={stats.total_tokens} span_ns={stats.span_ns:.1f}")
+    row(f"serve/p99/u{users}m{machines}", wall_us,
+        f"serve_p99_ns={stats.p99_token_ns:.1f} "
+        f"serve_p50_ns={stats.p50_token_ns:.1f} "
+        f"ttft_p99_ns={stats.p99_ttft_ns:.1f} "
+        f"ttft_p50_ns={stats.p50_ttft_ns:.1f} users={users}")
+
+    hits = sum(m["cache"]["schedule_hits"] for m in stats.machines)
+    misses = sum(m["cache"]["schedule_misses"] for m in stats.machines)
+    rate = hits / (hits + misses) if hits + misses else 0.0
+    steps = sum(m["steps"] for m in stats.machines)
+    row(f"serve/memo/u{users}m{machines}", wall_us,
+        f"sched_memo_hit_rate={rate:.3f} sched_memo_hits={hits} "
+        f"sched_memo_misses={misses} steps={steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -67,8 +67,15 @@ def bad_gate_rows(text: str) -> list[str]:
       slower), ``fuse_fused_gops >= fuse_unfused_gops`` and
       ``fuse_unfused_replay_ns >= fuse_fused_replay_ns`` (fusing a chain
       into one trace removes inter-op relocations and cannot slow the
-      refresh-phased replay).  Both members of every present pair must be
-      finite and non-zero.
+      refresh-phased replay), ``serve_batched_tokens_per_s >=
+      serve_sequential_tokens_per_s`` (continuously batching concurrent
+      decode sessions into the bank axis cannot lower aggregate modeled
+      throughput over serving them one at a time), and ``serve_p99_ns >=
+      serve_p50_ns`` (a percentile tail cannot sit below the median).
+      Both members of every present pair must be finite and non-zero.
+    * any ``sched_memo_hit_rate=`` must be finite and > 0 — steady-state
+      continuous-batching decode repeats identical scheduler busy periods,
+      so the whole-schedule memo must actually hit;
     * any ``fuse_elided_hops=`` must be > 0 — the fused chain must
       actually elide inter-op movement, not just concatenate traces.
     * the vectorized replay engine gates: ``vector_parity_delta_ns=`` must
@@ -99,6 +106,12 @@ def bad_gate_rows(text: str) -> list[str]:
         ("fuse_unfused_replay_ns", "fuse_fused_replay_ns",
          "the fused trace replays the same refresh-phased command stream "
          "in one pass, so it cannot be slower"),
+        ("serve_batched_tokens_per_s", "serve_sequential_tokens_per_s",
+         "continuous batching packs concurrent decode sessions into the "
+         "bank axis, so aggregate tokens/s cannot fall below serving the "
+         "same sessions one at a time"),
+        ("serve_p99_ns", "serve_p50_ns",
+         "the p99 token latency cannot sit below the median"),
     )
     bad = []
     for line in text.splitlines():
@@ -115,6 +128,13 @@ def bad_gate_rows(text: str) -> list[str]:
             if r is None or not math.isfinite(r) or r <= 0:
                 bad.append(f"cache_hit_rate={kv['cache_hit_rate']} "
                            f"(must be > 0) in: {line}")
+        if "sched_memo_hit_rate" in kv:
+            r = num("sched_memo_hit_rate")
+            if r is None or not math.isfinite(r) or r <= 0:
+                bad.append(f"sched_memo_hit_rate="
+                           f"{kv['sched_memo_hit_rate']} (steady-state "
+                           f"decode must hit the whole-schedule memo) "
+                           f"in: {line}")
         if "fuse_elided_hops" in kv:
             h = num("fuse_elided_hops")
             if h is None or not math.isfinite(h) or h <= 0:

@@ -42,8 +42,8 @@ import traceback
 
 from . import (bench_apps, bench_area, bench_data_movement,
                bench_dualitycache, bench_energy, bench_reliability,
-               bench_roofline, bench_table5_counts, bench_throughput,
-               bench_transposition)
+               bench_roofline, bench_serving, bench_table5_counts,
+               bench_throughput, bench_transposition)
 from .common import _KV, bad_gate_rows, bad_perf_values
 
 BENCHES = {
@@ -57,12 +57,13 @@ BENCHES = {
     "fig14": bench_transposition.main,       # Fig. 14  transposition
     "area": bench_area.main,                 # §7.8     area
     "roofline": bench_roofline.main,         # §Roofline (ours)
+    "serving": bench_serving.main,           # §Serving (ours)
 }
 
 
 # fast subset run nightly by CI before the full suite; each main() that
 # accepts ``smoke=True`` shrinks its problem sizes
-SMOKE = ("table5", "fig9", "fig14")
+SMOKE = ("table5", "fig9", "fig14", "serving")
 
 _ROW = re.compile(r"^([A-Za-z0-9_/.\-]+),(-?[\d.]+),(.*)$")
 

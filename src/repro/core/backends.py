@@ -308,6 +308,21 @@ class PerfStats:
                 del self._replay_costs[next(iter(self._replay_costs))]
         return hit
 
+    def _op_shares(self, prog: UProgram,
+                   trace: LoweredTrace) -> tuple[list, int]:
+        """Per-op charge split for one trace: ``([(per_op key, fraction)],
+        n_stage_ops)``.  Fused chain traces split proportionally by each
+        stage's share of command sequences and perform one element-op per
+        stage per lane; plain traces map to their own name."""
+        chain = getattr(trace, "chain", None)
+        stages = getattr(chain, "stages", ()) if chain is not None else ()
+        if stages:
+            total = max(1, sum(s.seq_end - s.seq_start for s in stages))
+            return ([(f"{s.op}/{prog.n_bits}b",
+                      (s.seq_end - s.seq_start) / total)
+                     for s in stages], len(stages))
+        return ([(f"{prog.name}/{prog.n_bits}b", 1.0)], 1)
+
     # -- charging (called by execute_program / the layout hooks) ------------
     def charge_program(self, prog: UProgram, banks: int, lanes: int,
                        trace: LoweredTrace | None = None,
@@ -327,21 +342,8 @@ class PerfStats:
         # stages (proportional to each stage's share of command sequences),
         # so per-op stall attribution survives fusion — the aggregate
         # chain gets no row of its own (it would double-count)
-        chain = getattr(trace, "chain", None)
-        # a fused trace performs one element-op per *stage* per lane — the
-        # same work the unfused chain counts across its separate calls
-        n_stage_ops = (len(chain.stages)
-                       if chain is not None and getattr(chain, "stages", ())
-                       else 1)
+        shares, n_stage_ops = self._op_shares(prog, trace)
         self.elem_ops += lanes * banks * n_stage_ops
-        if chain is not None and getattr(chain, "stages", ()):
-            total = max(1, sum(s.seq_end - s.seq_start
-                               for s in chain.stages))
-            shares = [(f"{s.op}/{prog.n_bits}b",
-                       (s.seq_end - s.seq_start) / total)
-                      for s in chain.stages]
-        else:
-            shares = [(f"{prog.name}/{prog.n_bits}b", 1.0)]
         entries = []
         for key, frac in shares:
             d = self.per_op.setdefault(key,
@@ -364,6 +366,58 @@ class PerfStats:
                 prog, trace, banks=banks, result=res)
             for d, frac in entries:
                 d["replay_ns"] += res.ns * frac
+
+    def charge_banked_share(self, prog: UProgram, trace: LoweredTrace,
+                            banks_total: int, banks_own: int,
+                            lanes: int) -> None:
+        """Charge this accumulator its *share* of one banked dispatch that
+        several requests rode together (the batched drain path:
+        :meth:`~repro.simdram.machine.SimdramMachine.drain` with
+        ``batch=True``).
+
+        The stacked execute issues ONE command stream to ``banks_total``
+        banks and the machine accumulator takes the full banked
+        :meth:`charge_program`; each rider owns ``banks_own`` of those
+        banks.  Latency — a shared, overlapped quantity — is apportioned
+        by bank fraction, and per-bank energy / element-ops are charged
+        for the rider's own banks, so summing ``exec_ns`` / ``exec_nj`` /
+        ``elem_ops`` (and, under the default per-op-anchored refresh
+        phase, the replay meters) over all riders reproduces the banked
+        machine charge exactly.  Counters (``n_programs``,
+        ``n_commands``, ``per_op["calls"]``) count per rider — each rider
+        did submit a request — so in batched drains the tenant-summed
+        counters intentionally exceed the machine's dispatch counts.
+        """
+        lat, en, cmds = self._prog_cost(prog, trace)
+        frac = banks_own / max(1, banks_total)
+        self.exec_ns += lat * frac
+        self.exec_nj += en * banks_own
+        self.n_programs += 1
+        self.n_commands += cmds
+        self.max_banks = max(self.max_banks, banks_own)
+        shares, n_stage_ops = self._op_shares(prog, trace)
+        self.elem_ops += lanes * banks_own * n_stage_ops
+        entries = []
+        for key, share in shares:
+            d = self.per_op.setdefault(key,
+                                       {"calls": 0, "ns": 0.0, "nj": 0.0,
+                                        "replay_ns": 0.0})
+            d["calls"] += 1
+            d["ns"] += lat * frac * share
+            d["nj"] += en * banks_own * share
+            entries.append((d, share))
+        if self.mode == "replay":
+            phase_ns = self.replay_ns if self.refresh_phase else 0.0
+            res = self._replay_cost(trace, banks_total, None, phase_ns)
+            self.replay_ns += res.ns * frac
+            self.replay_stall_ns += res.stall_ns * frac
+            self.replay_tfaw_ns += res.tfaw_stall_ns * frac
+            self.replay_refresh_ns += res.refresh_stall_ns * frac
+            self.replay_bank_spread_ns += res.bank_spread_ns * frac
+            self.replay_nj += self.model.replay_energy_nj(
+                prog, trace, banks=banks_total, result=res) * frac
+            for d, share in entries:
+                d["replay_ns"] += res.ns * frac * share
 
     def note_elided_movement(self, n_rows: int) -> None:
         """Count an inter-op relocation the fusion allocator removed:

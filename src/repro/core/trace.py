@@ -427,12 +427,16 @@ class TraceCache:
 
     def __init__(self, capacity: int | None = None, compile_fn=None,
                  verify: bool = True,
-                 replay_capacity: int | None = 512) -> None:
+                 replay_capacity: int | None = 512,
+                 schedule_capacity: int | None = 256) -> None:
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
         if replay_capacity is not None and replay_capacity < 1:
             raise ValueError(f"replay_capacity must be >= 1 or None, "
                              f"got {replay_capacity}")
+        if schedule_capacity is not None and schedule_capacity < 1:
+            raise ValueError(f"schedule_capacity must be >= 1 or None, "
+                             f"got {schedule_capacity}")
         self.capacity = capacity
         self.verify = verify
         self._compile_fn = compile_fn
@@ -448,12 +452,25 @@ class TraceCache:
         self._replays: collections.OrderedDict[tuple, object] = \
             collections.OrderedDict()
         self.replay_capacity = replay_capacity
+        # whole-schedule memo (the μProgram Memory's third table): a
+        # BankScheduler busy period is fully determined by its request set
+        # — (trace fingerprint, bank placement, stream arrival cycles) per
+        # request — plus the controller policies, bank count, refresh
+        # phase and timing signature.  A decode server re-issuing the same
+        # batch shape every step gets the whole stepped event loop back as
+        # a table lookup.  Content-keyed like the replay memo, so entries
+        # never go stale across recompiles.
+        self._schedules: collections.OrderedDict[tuple, object] = \
+            collections.OrderedDict()
+        self.schedule_capacity = schedule_capacity
         self._lock = threading.RLock()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
         self._replay_hits = 0
         self._replay_misses = 0
+        self._schedule_hits = 0
+        self._schedule_misses = 0
         _ALL_CACHES.add(self)
 
     def _compile(self, name: str, n_bits: int, optimize: bool) -> UProgram:
@@ -555,6 +572,27 @@ class TraceCache:
                     len(self._replays) > self.replay_capacity:
                 self._replays.popitem(last=False)
 
+    def schedule_get(self, key: tuple):
+        """Fetch a memoized whole-schedule outcome (None on miss)."""
+        with self._lock:
+            hit = self._schedules.get(key)
+            if hit is None:
+                self._schedule_misses += 1
+                return None
+            self._schedule_hits += 1
+            self._schedules.move_to_end(key)
+            return hit
+
+    def schedule_put(self, key: tuple, result) -> None:
+        """Memoize one scheduler busy period under its full request-set
+        key (see :meth:`BankScheduler.run`'s memo hook)."""
+        with self._lock:
+            self._schedules[key] = result
+            self._schedules.move_to_end(key)
+            while self.schedule_capacity is not None and \
+                    len(self._schedules) > self.schedule_capacity:
+                self._schedules.popitem(last=False)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
@@ -565,7 +603,9 @@ class TraceCache:
 
     def stats(self) -> dict:
         """{hits, misses, entries, hit_rate, capacity, evictions} plus the
-        replay-memo counters (replay_hits, replay_misses, replay_entries)."""
+        replay-memo counters (replay_hits, replay_misses, replay_entries)
+        and the schedule-memo counters (schedule_hits, schedule_misses,
+        schedule_entries)."""
         with self._lock:
             h, m = self._hits, self._misses
             return {"hits": h, "misses": m, "entries": len(self._entries),
@@ -573,7 +613,10 @@ class TraceCache:
                     "capacity": self.capacity, "evictions": self._evictions,
                     "replay_hits": self._replay_hits,
                     "replay_misses": self._replay_misses,
-                    "replay_entries": len(self._replays)}
+                    "replay_entries": len(self._replays),
+                    "schedule_hits": self._schedule_hits,
+                    "schedule_misses": self._schedule_misses,
+                    "schedule_entries": len(self._schedules)}
 
     def invalidate(self, name: str) -> int:
         """Drop every cached width/optimize variant of one operation —
@@ -597,12 +640,14 @@ class TraceCache:
         with self._lock:
             self._hits = self._misses = self._evictions = 0
             self._replay_hits = self._replay_misses = 0
+            self._schedule_hits = self._schedule_misses = 0
 
     def clear(self) -> None:
         """Drop entries and counters (in place — aliases stay valid)."""
         with self._lock:
             self._entries.clear()
             self._replays.clear()
+            self._schedules.clear()
             self.reset_stats()
 
 

@@ -1,63 +1,70 @@
-"""Batched serving driver: continuous greedy decoding over request batches.
+"""SIMDRAM serving driver: continuous-batching decode over a pool of
+bank-sharded machines (:class:`~repro.serve.server.SimdramServer`).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --reduced --batch 8 --prompt-len 32 --gen 64
+    PYTHONPATH=src python -m repro.launch.serve --users 8 --steps 16 \
+        --config qwen1_5_0_5b,mamba2_130m --machines 2 --banks 8 \
+        --refresh-policy aware
+
+Each user is one decode session: its model-zoo config sets the per-token
+μProgram profile (request-mix diversity), arrivals are staggered on the
+modeled clock, and the server continuously batches compatible sessions
+into the bank axis at every step boundary.  All reported latencies are
+modeled nanoseconds (deterministic), not wall clock.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from ..configs import get_config, get_reduced
-from ..distributed.sharding import tree_shardings
-from ..models.params import init_params
-from ..models.transformer import model_defs
-from ..serve.decode import greedy_decode
-from .train import build_mesh
+from ..serve.server import SimdramServer
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=3)
+    ap = argparse.ArgumentParser(
+        description="continuous-batching decode over SIMDRAM machines")
+    ap.add_argument("--users", type=int, default=8,
+                    help="concurrent decode sessions")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="tokens generated per session")
+    ap.add_argument("--config", default="qwen1_5_0_5b,mamba2_130m",
+                    help="comma-separated model-zoo configs, assigned "
+                         "round-robin across users")
+    ap.add_argument("--machines", type=int, default=2,
+                    help="SimdramMachine pool size")
+    ap.add_argument("--banks", type=int, default=8,
+                    help="modeled controller banks per machine (the "
+                         "continuous batch width)")
+    ap.add_argument("--refresh-policy", default="aware",
+                    choices=("aware", "stall", "defer"))
+    ap.add_argument("--backend", default=None,
+                    help="execution backend for every pooled machine")
+    ap.add_argument("--mode", default="analytic",
+                    choices=("analytic", "replay"),
+                    help="PerfStats metering mode per machine")
+    ap.add_argument("--arrival-gap-ns", type=float, default=500.0,
+                    help="modeled arrival stagger between users")
+    ap.add_argument("--max-steps", type=int, default=None,
+                    help="serving-loop step cap (default: run to drain)")
     args = ap.parse_args(argv)
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    mesh = build_mesh()
-    defs = model_defs(cfg)
-    params = jax.tree.map(jax.device_put, init_params(defs, jax.random.key(0)),
-                          tree_shardings(defs, mesh))
-    extra = None
-    if cfg.enc_dec:
-        extra = {"encoder_frames": jnp.zeros(
-            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)}
-    print(f"serving {cfg.name} on mesh {dict(mesh.shape)} "
-          f"(batch={args.batch}, kv={cfg.kv_cache_dtype})")
-    total_toks = 0
-    t0 = time.time()
-    for req in range(args.requests):
-        prompts = jax.random.randint(jax.random.key(req + 1),
-                                     (args.batch, args.prompt_len),
-                                     0, cfg.vocab)
-        out = greedy_decode(params, cfg, prompts, steps=args.gen,
-                            max_seq=args.prompt_len + args.gen,
-                            extra_batch=extra)
-        out.block_until_ready()
-        total_toks += args.batch * args.gen
-        print(f"  request batch {req}: generated {out.shape} "
-              f"first-seq head: {out[0, :8].tolist()}")
-    dt = time.time() - t0
-    print(f"{total_toks} tokens in {dt:.1f}s "
-          f"({total_toks / dt:.1f} tok/s on this host)")
-    return 0
+    configs = [c.strip() for c in args.config.split(",") if c.strip()]
+    if not configs:
+        ap.error("--config needs at least one model-zoo name")
+    server = SimdramServer(n_machines=args.machines, n_banks=args.banks,
+                           refresh_policy=args.refresh_policy,
+                           backend=args.backend, mode=args.mode)
+    print(f"serving {args.users} users x {args.steps} tokens over "
+          f"{args.machines} machines ({args.banks} banks, "
+          f"refresh={args.refresh_policy}, mix={configs})")
+    handles = []
+    for u in range(args.users):
+        handles.append(server.submit_session(
+            configs[u % len(configs)], n_tokens=args.steps,
+            arrival_ns=u * args.arrival_gap_ns))
+    stats = server.run(max_steps=args.max_steps)
+    print(stats.report())
+    n_done = sum(h.done() for h in handles)
+    print(f"{n_done}/{len(handles)} sessions retired")
+    return 0 if n_done == len(handles) else 1
 
 
 if __name__ == "__main__":

@@ -1,1 +1,10 @@
-"""Serving: prefill + batched single-token decode with sharded KV caches."""
+"""Serving: prefill + batched single-token decode with sharded KV caches,
+and the continuous-batching :class:`SimdramServer` over bank-sharded
+machine pools (:mod:`repro.serve.server`)."""
+from .batching import (ContinuousBatcher, DecodeSession, RequestProfile,
+                       percentile, profile_for)
+from .server import ServingStats, SessionHandle, SimdramServer
+
+__all__ = ["ContinuousBatcher", "DecodeSession", "RequestProfile",
+           "percentile", "profile_for", "ServingStats", "SessionHandle",
+           "SimdramServer"]

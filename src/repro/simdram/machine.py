@@ -67,7 +67,8 @@ import threading
 
 import jax.numpy as jnp
 
-from ..core.backends import PerfStats, execute_heterogeneous
+from ..core.backends import (PerfStats, execute_heterogeneous,
+                             execute_lowered)
 from ..core.backends import timed as _timed_execution
 from ..core.compiler import SliceSpec, compile_slice
 from ..core.graph import LogicGraph
@@ -185,10 +186,12 @@ class _Submission:
     """One queued :meth:`SimdramMachine.submit` request awaiting drain."""
 
     __slots__ = ("future", "name", "operands", "n_bits", "out_bits",
-                 "signed_out", "optimize", "backend", "tenant")
+                 "signed_out", "optimize", "backend", "tenant", "priority",
+                 "arrival_ns")
 
     def __init__(self, future, name, operands, n_bits, out_bits,
-                 signed_out, optimize, backend, tenant) -> None:
+                 signed_out, optimize, backend, tenant, priority,
+                 arrival_ns) -> None:
         self.future = future
         self.name = name
         self.operands = operands
@@ -198,6 +201,8 @@ class _Submission:
         self.optimize = optimize
         self.backend = backend
         self.tenant = tenant
+        self.priority = priority
+        self.arrival_ns = arrival_ns
 
 
 class SimdramFuture:
@@ -593,7 +598,8 @@ class SimdramMachine:
     def submit(self, op: str, *operands, n_bits: int = 8,
                tenant: str = "default", out_bits: int | None = None,
                signed_out: bool = False, optimize: bool = True,
-               backend: str | None = None) -> SimdramFuture:
+               backend: str | None = None, priority: int = 0,
+               arrival_ns: float = 0.0) -> SimdramFuture:
         """Queue one operation for scheduled execution; returns a
         :class:`SimdramFuture`.
 
@@ -604,7 +610,15 @@ class SimdramMachine:
         workload stream for scheduling fairness bookkeeping and PerfStats
         attribution (:meth:`tenant_stats`); operands follow the same
         rules as calling the bound op directly (horizontal arrays or
-        plane-resident :class:`BitplaneArray`\\ s)."""
+        plane-resident :class:`BitplaneArray`\\ s).
+
+        ``priority`` is the submission's latency class: :meth:`drain`
+        packs and enqueues higher-priority submissions first (FIFO within
+        a class), so they take the least-loaded banks and win FR-FCFS
+        age ties.  ``arrival_ns`` stamps the request's arrival on the
+        drain's rank clock (it cannot issue earlier, and its
+        :class:`RequestTiming` queue/service split is measured from it) —
+        the serving layer uses it to model intra-step arrival skew."""
         if op not in self.ops():
             raise KeyError(f"unknown operation {op!r}; this machine "
                            f"knows {self.ops()}")
@@ -613,12 +627,14 @@ class SimdramMachine:
             self._n_submitted += 1
             self._pending.append(_Submission(
                 fut, op, operands, n_bits, out_bits, signed_out,
-                optimize, backend, tenant))
+                optimize, backend, tenant, int(priority),
+                float(arrival_ns)))
         return fut
 
     def drain(self, n_banks: int | None = None,
               refresh_policy: str = "aware", policy: str = "frfcfs",
-              scheduler: BankScheduler | None = None) -> ScheduleResult:
+              scheduler: BankScheduler | None = None,
+              batch: bool = False) -> ScheduleResult:
         """Run every pending submission: model the schedule (per-bank
         queues, FR-FCFS issue, the chosen refresh policy) and execute the
         corresponding μPrograms, resolving each submission's future with
@@ -630,50 +646,86 @@ class SimdramMachine:
         policies fully.  Returns the :class:`ScheduleResult` (makespan,
         per-request and per-tenant breakdowns).  Execution charges land on
         the machine accumulator *and* on each submission's tenant
-        accumulator (:meth:`tenant_stats`)."""
+        accumulator (:meth:`tenant_stats`).
+
+        Packing order honors each submission's ``priority`` (higher
+        first, FIFO within a class): a high-priority request takes the
+        least-loaded banks and wins FR-FCFS age ties.
+
+        ``batch=True`` is the continuous-batching drain the serving layer
+        uses: *compatible* submissions — same lowered trace, backend,
+        out_bits and unbanked operand shape — are stacked along the bank
+        axis and issued as ONE bank-parallel request (one scheduler entry,
+        one vmapped dispatch) instead of one request per submission, in
+        chunks of the controller's bank count.  All riders of a stack
+        share its :class:`RequestTiming`; per-tenant attribution switches
+        to fractional bank shares
+        (:meth:`~repro.core.backends.PerfStats.charge_banked_share`), so
+        tenant-summed ns/nJ/elem-ops still reproduce the machine totals
+        while per-tenant *counters* count each rider's own request."""
         with self._submit_lock:
             subs = self._pending
             self._pending = []
+        # latency-class packing (stable: FIFO within a class)
+        subs.sort(key=lambda s: -s.priority)
         if scheduler is None:
             if n_banks is None:
                 n_banks = self.banks if self.banks > 1 \
                     else self.timing.banks_per_chip
             scheduler = BankScheduler(timing=self.timing, n_banks=n_banks,
                                       policy=policy,
-                                      refresh_policy=refresh_policy)
+                                      refresh_policy=refresh_policy,
+                                      memo=self.memory)
         if not subs:
             return scheduler.run()
+        resolved = self._drain_batched(subs, scheduler) if batch \
+            else self._drain_each(subs, scheduler)
+        sched_res = scheduler.run()
+        by_rid = {rt.index: rt for rt in sched_res.requests}
+        for fut, rid in resolved:
+            fut._timing = by_rid.get(rid)
+            fut._done = True
+        return sched_res
+
+    def _prepare(self, sub: _Submission):
+        """Fetch the compiled pair and bind one submission's operands
+        (plane layout); caller wraps this in the tenant's timed scope so
+        transposition charges land on the right tenant."""
+        prog, trace = self.memory.get(sub.name, sub.n_bits, sub.optimize)
+        names = tuple(dict.fromkeys(prog.inputs))
+        if len(sub.operands) != len(names):
+            raise TypeError(
+                f"{sub.name} takes {len(names)} operands "
+                f"{names}, got {len(sub.operands)}")
+        keep = any(isinstance(x, BitplaneArray) for x in sub.operands)
+        bound = {}
+        for arr_name, x in zip(names, sub.operands):
+            if not isinstance(x, BitplaneArray):
+                x = BitplaneArray.from_values(jnp.asarray(x), sub.n_bits)
+            bound[arr_name] = x
+        if len({(o.banked, o.n_banks, o.length, o.words)
+                for o in bound.values()}) > 1:
+            raise ValueError(
+                f"{sub.name}: operand bank/length shapes disagree: "
+                f"{[o.planes.shape for o in bound.values()]}")
+        return prog, trace, bound, keep
+
+    def _drain_each(self, subs, scheduler) -> list:
+        """One scheduler request + one execution item per submission (the
+        default drain path).  Returns ``[(future, rid), ...]``."""
         prepared = []
         with self.session(), _timed_execution(stats=self.stats):
             for sub in subs:
                 # prepare inside the tenant's scope so operand
                 # transposition charges land on the right tenant
                 with _timed_execution(stats=self.tenant_stats(sub.tenant)):
-                    prog, trace = self.memory.get(sub.name, sub.n_bits,
-                                                  sub.optimize)
-                    names = tuple(dict.fromkeys(prog.inputs))
-                    if len(sub.operands) != len(names):
-                        raise TypeError(
-                            f"{sub.name} takes {len(names)} operands "
-                            f"{names}, got {len(sub.operands)}")
-                    keep = any(isinstance(x, BitplaneArray)
-                               for x in sub.operands)
-                    bound = {}
-                    for arr_name, x in zip(names, sub.operands):
-                        if not isinstance(x, BitplaneArray):
-                            x = BitplaneArray.from_values(jnp.asarray(x),
-                                                          sub.n_bits)
-                        bound[arr_name] = x
-                if len({(o.banked, o.n_banks, o.length, o.words)
-                        for o in bound.values()}) > 1:
-                    raise ValueError(
-                        f"{sub.name}: operand bank/length shapes disagree: "
-                        f"{[o.planes.shape for o in bound.values()]}")
+                    prog, trace, bound, keep = self._prepare(sub)
                 first = next(iter(bound.values()))
                 width = first.n_banks if first.banked else 1
                 rid = scheduler.enqueue(
                     trace, banks=width, tenant=sub.tenant,
                     name=f"{sub.name}/{sub.n_bits}b",
+                    arrival_ns=sub.arrival_ns,
                     lanes=first.words * LANE_WORD * width)
                 prepared.append((sub, prog, trace, bound, keep, rid))
             # execute per tenant (attribution scope); inside a tenant,
@@ -697,12 +749,96 @@ class SimdramMachine:
                                             sub.out_bits or sub.n_bits,
                                             first.length, sub.signed_out)
                         sub.future._value = res if keep else res.to_values()
-        sched_res = scheduler.run()
-        by_rid = {rt.index: rt for rt in sched_res.requests}
-        for sub, prog, trace, bound, keep, rid in prepared:
-            sub.future._timing = by_rid.get(rid)
-            sub.future._done = True
-        return sched_res
+        return [(sub.future, rid)
+                for sub, _prog, _trace, _bound, _keep, rid in prepared]
+
+    def _drain_batched(self, subs, scheduler) -> list:
+        """Continuous-batching drain: stack compatible submissions along
+        the bank axis into one scheduler request + one vmapped dispatch
+        (see :meth:`drain` with ``batch=True``).  Returns
+        ``[(future, rid), ...]``."""
+        resolved = []
+        with self.session(), _timed_execution(stats=self.stats):
+            prepared = []
+            for sub in subs:
+                with _timed_execution(stats=self.tenant_stats(sub.tenant)):
+                    prepared.append((sub, *self._prepare(sub)))
+            # group compatible submissions; dict preserves first-occurrence
+            # order, so the priority sort above carries into enqueue order
+            groups: dict = {}
+            for p in prepared:
+                sub, prog, trace, bound, keep = p
+                first = next(iter(bound.values()))
+                if first.banked:
+                    # already bank-resident: dispatch solo, as unbatched
+                    sig = ("solo", id(sub))
+                else:
+                    sig = (id(trace), sub.backend or self.backend,
+                           sub.out_bits,
+                           tuple((k, tuple(v.planes.shape))
+                                 for k, v in sorted(bound.items())))
+                groups.setdefault(sig, []).append(p)
+            cap = max(1, scheduler.n_banks)
+            for members in groups.values():
+                for i in range(0, len(members), cap):
+                    resolved.extend(self._run_stack(members[i:i + cap],
+                                                    scheduler))
+        return resolved
+
+    def _run_stack(self, members, scheduler) -> list:
+        """Issue one compatible chunk as a single banked request."""
+        sub0, prog, trace, bound0, _keep0 = members[0]
+        first0 = next(iter(bound0.values()))
+        ob = {prog.outputs[0]: sub0.out_bits} if sub0.out_bits else None
+        backend = sub0.backend or self.backend
+        out_name = prog.outputs[0]
+        if len(members) == 1:
+            sub, prog, trace, bound, keep = members[0]
+            width = first0.n_banks if first0.banked else 1
+            rid = scheduler.enqueue(
+                trace, banks=width, tenant=sub.tenant,
+                name=f"{sub.name}/{sub.n_bits}b",
+                arrival_ns=sub.arrival_ns,
+                lanes=first0.words * LANE_WORD * width)
+            with _timed_execution(stats=self.tenant_stats(sub.tenant)):
+                outs = execute_lowered(
+                    prog, trace, {k: v.planes for k, v in bound.items()},
+                    out_bits=ob, backend=backend, machine=self)
+            res = BitplaneArray(outs[out_name], sub.out_bits or sub.n_bits,
+                                first0.length, sub.signed_out)
+            sub.future._value = res if keep else res.to_values()
+            return [(sub.future, rid)]
+        width = len(members)
+        lanes_per = first0.words * LANE_WORD
+        tenants = {m[0].tenant for m in members}
+        label = sub0.tenant if len(tenants) == 1 else "batch"
+        rid = scheduler.enqueue(
+            trace, banks=width, tenant=label,
+            name=f"{sub0.name}/{sub0.n_bits}b",
+            arrival_ns=min(m[0].arrival_ns for m in members),
+            lanes=lanes_per * width)
+        stacked = {k: jnp.stack([m[3][k].planes for m in members])
+                   for k in bound0}
+        # the machine accumulator takes the full banked charge here (the
+        # tenant scopes are NOT active); each rider below takes its
+        # fractional bank share so tenant sums stay exact
+        outs = execute_lowered(prog, trace, stacked, out_bits=ob,
+                               backend=backend, machine=self)
+        out = []
+        for idx, (sub, _prog, _trace, bound, keep) in enumerate(members):
+            self.tenant_stats(sub.tenant).charge_banked_share(
+                prog, trace, banks_total=width, banks_own=1,
+                lanes=lanes_per)
+            first = next(iter(bound.values()))
+            res = BitplaneArray(outs[out_name][idx],
+                                sub.out_bits or sub.n_bits,
+                                first.length, sub.signed_out)
+            # resolve in the tenant's scope: the output de-transposition
+            # is the rider's own work, same as the unbatched path
+            with _timed_execution(stats=self.tenant_stats(sub.tenant)):
+                sub.future._value = res if keep else res.to_values()
+            out.append((sub.future, rid))
+        return out
 
     # -- scoped instrumentation ----------------------------------------------
     def register_transpose_hook(self, hook) -> None:

@@ -37,10 +37,18 @@ conventional DRAM controller front end:
   whichever ``replay_engine`` the timing selects: the engines are
   cycle-identical, so the anchor is engine-independent).
 
-The event loop here always steps: an interleaved multi-trace schedule has
-no per-trace closed form to memoize, unlike the single-trace replays the
+The event loop always *steps*: an interleaved multi-trace schedule has no
+per-trace closed form to memoize, unlike the single-trace replays the
 vectorized engine (``DRAMTiming(replay_engine="vectorized")``) compiles
 and the :class:`~repro.core.trace.TraceCache` replay memo serves warm.
+What CAN be memoized is the whole busy period: a run's outcome is fully
+determined by its request set — per request the trace fingerprint, bank
+placement and stream arrival cycles — plus the controller policies, bank
+count, refresh phase and timing signature.  Pass ``memo=`` (a
+:class:`~repro.core.trace.TraceCache`) and :meth:`run` serves a repeated
+busy period as a table lookup (re-labeled with the new requests' names /
+tenants / lanes), so a decode server re-issuing the same batch shape
+every step does not re-step the Python event loop per step.
 
 The scheduler is a pure timing model: it consumes lowered traces and
 produces a :class:`ScheduleResult` (makespan, per-request
@@ -197,7 +205,8 @@ class _Request:
 
     __slots__ = ("name", "tenant", "kinds", "analytic", "lanes", "bank_ids",
                  "arrival", "first_act", "finishes", "streams_left",
-                 "tfaw", "refresh", "n_ref", "restarts", "acts", "fused")
+                 "tfaw", "refresh", "n_ref", "restarts", "acts", "fused",
+                 "arrivals", "fingerprint")
 
     def __init__(self, name, tenant, kinds, analytic, lanes, bank_ids,
                  arrival, fused=()) -> None:
@@ -217,6 +226,8 @@ class _Request:
         self.restarts = 0
         self.acts = 0
         self.fused = fused
+        self.arrivals: tuple[int, ...] = ()   # per-stream issue cycles
+        self.fingerprint = None               # trace content hash (memo key)
 
 
 class BankScheduler:
@@ -248,13 +259,18 @@ class BankScheduler:
         busy periods; per-period pairing state resets with :meth:`run`).
         A trace with lint *errors* is rejected at ``enqueue`` with
         :class:`~repro.core.tracelint.TraceLintError`.
+    memo : optional :class:`~repro.core.trace.TraceCache` whose schedule
+        memo serves repeated busy periods without re-stepping the event
+        loop (see the module docstring).  Content-keyed, so a hit is
+        cycle-exact; request names/tenants/lanes are re-labeled from the
+        live request set.
     """
 
     def __init__(self, timing: DRAMTiming | None = None,
                  n_banks: int | None = None, policy: str = "frfcfs",
                  refresh_policy: str = "aware",
                  refresh_phase_ns: float = 0.0,
-                 verify: bool = True) -> None:
+                 verify: bool = True, memo=None) -> None:
         if policy not in _ISSUE_POLICIES:
             raise ValueError(f"unknown issue policy {policy!r} "
                              f"(expected one of {_ISSUE_POLICIES})")
@@ -274,6 +290,7 @@ class BankScheduler:
         self._load = [0] * self.n_banks      # enqueued ACT-cycles per bank
         self._requests: list[_Request] = []
         self.verify = verify
+        self.memo = memo
         # (name, tenant, D-row footprint, bank set) per request this busy
         # period — the cross-trace bank-overlap lint pairs against these
         self._lint_entries: list[tuple[str, str, frozenset, set]] = []
@@ -347,6 +364,8 @@ class BankScheduler:
                       for s in getattr(chain, "stages", ()) or ())
         req = _Request(name, tenant, kinds, analytic, int(lanes), bank_ids,
                        min(arrivals) if arrivals else base, fused=fused)
+        req.arrivals = tuple(arrivals)
+        req.fingerprint = trace.fingerprint
         self._requests.append(req)
         if not kinds:
             # empty trace: completes on arrival, engages no bank
@@ -380,6 +399,25 @@ class BankScheduler:
         phase = 0
         if rt.c_refi and self.refresh_phase_ns:
             phase = math.ceil(self.refresh_phase_ns / tck) % rt.c_refi
+        memo_key = None
+        if self.memo is not None and self._requests:
+            # the busy period's full determinant: per-request content
+            # (trace hash, placement, stream arrival cycles) + controller
+            # configuration.  Names/tenants/lanes/fused labels are NOT in
+            # the key — a hit is re-labeled from the live request set.
+            memo_key = ("sched", self.policy, self.refresh_policy, phase,
+                        self.n_banks, rt._sig,
+                        tuple((r.fingerprint, r.bank_ids, r.arrivals)
+                              for r in self._requests))
+            hit = self.memo.schedule_get(memo_key)
+            if hit is not None:
+                relabeled = tuple(
+                    dataclasses.replace(
+                        cached, name=req.name, tenant=req.tenant,
+                        lanes=req.lanes, fused_stages=req.fused)
+                    for cached, req in zip(hit.requests, self._requests))
+                self._reset()
+                return dataclasses.replace(hit, requests=relabeled)
         rank = rt._rank(coupled=True, phase=phase)
         queues = self._queues
         requests = self._requests
@@ -514,8 +552,13 @@ class BankScheduler:
             n_refresh_stalls=rank.n_refresh_stalls,
             n_restarts=total_restarts, requests=tuple(out),
             bank_finish_ns=tuple(f * tck for f in bank_finish))
+        if memo_key is not None:
+            self.memo.schedule_put(memo_key, result)
+        self._reset()
+        return result
+
+    def _reset(self) -> None:
         self._queues = [[] for _ in range(self.n_banks)]
         self._load = [0] * self.n_banks
         self._requests = []
         self._lint_entries = []
-        return result

@@ -1,0 +1,501 @@
+"""The async serving layer: continuous-batching decode over bank-sharded
+machine pools (PR 10's tentpole) and the satellites that rode along.
+
+* **percentile math** — golden tests for the deterministic
+  linear-interpolation percentile the SLO metrics use;
+* **request profiles** — every model-zoo config maps to a valid,
+  deterministic per-token μProgram profile;
+* **decode semantics** — a served session's value recurrence matches the
+  numpy oracle, solo or continuously batched;
+* **churn** — sessions of different lengths joining at staggered modeled
+  arrivals all retire, with admission at step boundaries only;
+* **pool isolation** — sessions shard across machines with no
+  cross-machine PerfStats leakage (disjoint tenant sets);
+* **concurrency** — a 2-thread submission stress and the asyncio surface
+  (``run_async`` / ``wait_async``);
+* **batched drain** — ``drain(batch=True)`` stacks compatible
+  submissions into one banked request with oracle-exact values, honors
+  ``priority=`` in packing order (the PR-6 bugfix), keeps tenant-summed
+  meters exactly equal to the machine totals, and under ``"defer"``
+  matches the property-tested replay equivalence;
+* **schedule memo** — a repeated busy period is served from the
+  μProgram Memory's schedule table cycle-exactly, relabeled to the live
+  request set.
+
+Deterministic throughout: every asserted latency is modeled ns on a rank
+clock; wall clock appears only as thread-join guard timeouts.
+"""
+import asyncio
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.circuits import list_operations
+from repro.ops import SimdramMachine
+from repro.serve import (ContinuousBatcher, DecodeSession, SimdramServer,
+                         percentile, profile_for)
+from repro.simdram.timing import TraceReplayTiming
+
+RNG = np.random.default_rng(0x5E12)
+
+MIX = ["qwen1_5_0_5b", "mamba2_130m", "whisper_large_v3", "olmoe_1b_7b"]
+
+
+def _oracle_decode(session: DecodeSession, op: str, n_tokens: int):
+    """Replay a session's value recurrence in numpy."""
+    mask = (1 << session.profile.n_bits) - 1
+    a, b = session.a.copy(), session.b.copy()
+    fns = {"addition": np.add, "multiplication": np.multiply,
+           "subtraction": np.subtract, "maximum": np.maximum,
+           "minimum": np.minimum}
+    for _ in range(n_tokens):
+        a = fns[op](a, b) & mask
+    return a
+
+
+# ---------------------------------------------------------------------------
+# percentile math (golden)
+# ---------------------------------------------------------------------------
+
+def test_percentile_golden_values():
+    xs = list(range(1, 101))
+    assert percentile(xs, 50) == pytest.approx(50.5)
+    assert percentile(xs, 99) == pytest.approx(99.01)
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 100.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([1, 2, 3, 4], 25) == pytest.approx(1.75)
+    assert percentile([4, 3, 2, 1], 25) == pytest.approx(1.75)  # unsorted
+
+
+def test_percentile_rejects_bad_input():
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+
+
+# ---------------------------------------------------------------------------
+# request profiles from the model zoo
+# ---------------------------------------------------------------------------
+
+def test_profile_for_covers_the_zoo():
+    ops = set(list_operations())
+    for arch in ARCHS:
+        p = profile_for(arch)
+        assert p.op in ops, arch
+        assert 32 <= p.lanes <= 128 and p.lanes % 32 == 0, arch
+        assert p.n_bits == 8 and p.config == arch
+        assert p == profile_for(arch)            # deterministic
+        assert p.batch_key == (p.op, p.n_bits, p.lanes)
+
+
+# ---------------------------------------------------------------------------
+# decode semantics
+# ---------------------------------------------------------------------------
+
+def test_single_session_matches_oracle():
+    server = SimdramServer(n_machines=1, n_banks=4)
+    h = server.submit_session("qwen1_5_0_5b", n_tokens=5)   # addition
+    stats = server.run()
+    assert h.done()
+    want = _oracle_decode(DecodeSession(0, profile_for("qwen1_5_0_5b"), 5),
+                          "addition", 5)
+    np.testing.assert_array_equal(np.asarray(h.result()), want)
+    s = h.session
+    assert s.tokens_done == 5 and len(s.token_ns) == 5
+    assert s.ttft_ns is not None and s.ttft_ns > 0
+    assert s.finish_ns >= s.first_token_ns
+    assert all(t > 0 for t in s.token_ns)
+    assert stats.total_tokens == 5 and stats.n_sessions == 1
+
+
+def test_batched_sessions_match_solo_values():
+    # 4 compatible sessions continuously batched on one machine must
+    # produce exactly the values each would produce served alone
+    batched = SimdramServer(n_machines=1, n_banks=8)
+    hs = [batched.submit_session("mamba2_130m", n_tokens=4)
+          for _ in range(4)]
+    batched.run()
+    for i, h in enumerate(hs):
+        solo = SimdramServer(n_machines=1, n_banks=8)
+        # seed pins the operand state to the batched session's (sids
+        # differ across servers otherwise)
+        hsolo = solo.submit_session("mamba2_130m", n_tokens=4, seed=i)
+        solo.run()
+        np.testing.assert_array_equal(np.asarray(h.result()),
+                                      np.asarray(hsolo.result()))
+
+
+# ---------------------------------------------------------------------------
+# churn: admission / retirement at step boundaries
+# ---------------------------------------------------------------------------
+
+def test_churn_mixed_lengths_and_staggered_arrivals():
+    server = SimdramServer(n_machines=2, n_banks=8)
+    hs = [server.submit_session(MIX[i % len(MIX)], n_tokens=2 + i % 4,
+                                arrival_ns=i * 700.0)
+          for i in range(8)]
+    stats = server.run()
+    assert all(h.done() for h in hs)
+    assert stats.n_sessions == 8
+    assert stats.total_tokens == sum(2 + i % 4 for i in range(8))
+    for h in hs:
+        s = h.session
+        # no token can complete before the session existed
+        assert s.first_token_ns >= s.arrival_ns
+        assert s.finish_ns is not None and s.finish_ns >= s.first_token_ns
+    # a second run on the same server serves new sessions cleanly
+    h2 = server.submit_session("qwen1_5_0_5b", n_tokens=2)
+    server.run()
+    assert h2.done() and stats.n_sessions == 8  # old stats unaffected
+
+
+def test_admission_only_at_step_boundaries():
+    # a session arriving mid-flight joins a busy machine only once the
+    # modeled clock reaches its arrival — its first token cannot predate
+    # the arrival, and the machine clock at admission covers it
+    server = SimdramServer(n_machines=1, n_banks=8)
+    server.submit_session("qwen1_5_0_5b", n_tokens=6, arrival_ns=0.0)
+    late = server.submit_session("qwen1_5_0_5b", n_tokens=2,
+                                 arrival_ns=1.0)
+    server.run()
+    assert late.done()
+    assert late.session.first_token_ns >= late.session.arrival_ns
+
+
+# ---------------------------------------------------------------------------
+# machine-pool sharding and isolation
+# ---------------------------------------------------------------------------
+
+def test_pool_shards_and_isolates_perfstats():
+    server = SimdramServer(n_machines=2, n_banks=8)
+    hs = [server.submit_session("qwen1_5_0_5b", n_tokens=3)
+          for _ in range(8)]
+    stats = server.run()
+    assert all(h.done() for h in hs)
+    assert stats.users == 8
+    per_machine = [{s.tenant for s in server.completed
+                    if s.machine_index == i} for i in range(2)]
+    # least-active sharding balances 8 sessions 4/4
+    assert sorted(len(g) for g in per_machine) == [4, 4]
+    # isolation: each machine's PerfStats tenants are exactly its own
+    # sessions — no cross-session leakage between pool members
+    for i, b in enumerate(server.batchers):
+        assert set(b.machine.stats.tenants) == per_machine[i]
+        assert b.machine.stats.total_ns > 0
+    assert per_machine[0].isdisjoint(per_machine[1])
+
+
+# ---------------------------------------------------------------------------
+# ServingStats: SLO metrics on top of PerfStats.snapshot()
+# ---------------------------------------------------------------------------
+
+def test_serving_stats_snapshot_structure():
+    server = SimdramServer(n_machines=2, n_banks=8)
+    for i in range(8):
+        server.submit_session(MIX[i % len(MIX)], n_tokens=3,
+                              arrival_ns=i * 100.0)
+    stats = server.run()
+    snap = stats.snapshot()
+    json.dumps(snap)                               # JSON-safe throughout
+    assert snap["users"] == 8 and snap["n_sessions"] == 8
+    assert snap["total_tokens"] == 24
+    assert 0 < snap["p50_token_ns"] <= snap["p99_token_ns"]
+    assert 0 < snap["p50_ttft_ns"] <= snap["p99_ttft_ns"]
+    assert snap["tokens_per_s"] > 0 and snap["span_ns"] > 0
+    assert len(snap["machines"]) == 2
+    for m in snap["machines"]:
+        # the per-machine section embeds the existing PerfStats snapshot
+        assert m["perf"]["execute"]["n_programs"] > 0
+        assert "schedule_hits" in m["cache"]
+    text = stats.report()
+    assert "ns/token" in text and "tokens/s" in text
+
+
+def test_batched_throughput_beats_sequential():
+    # the serve/batched gate's logic at test scale: continuous batching
+    # across the bank axis must not lower aggregate modeled throughput
+    # vs serving the same sessions one at a time
+    n, toks = 6, 3
+    batched = SimdramServer(n_machines=1, n_banks=8)
+    for i in range(n):
+        batched.submit_session("qwen1_5_0_5b", n_tokens=toks, seed=i)
+    bstats = batched.run()
+    seq_span = 0.0
+    for i in range(n):
+        solo = SimdramServer(n_machines=1, n_banks=8)
+        solo.submit_session("qwen1_5_0_5b", n_tokens=toks, seed=i)
+        seq_span += solo.run().span_ns
+    seq_tps = n * toks / seq_span * 1e9
+    assert bstats.tokens_per_s >= seq_tps
+
+
+# ---------------------------------------------------------------------------
+# concurrency: threads and asyncio
+# ---------------------------------------------------------------------------
+
+def test_two_thread_submission_stress():
+    server = SimdramServer(n_machines=2, n_banks=8)
+    handles: dict[int, list] = {0: [], 1: []}
+
+    def submit(tid):
+        for i in range(4):
+            handles[tid].append(server.submit_session(
+                MIX[(tid * 4 + i) % len(MIX)], n_tokens=2 + i % 2,
+                seed=tid * 4 + i))
+
+    threads = [threading.Thread(target=submit, args=(t,)) for t in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    all_handles = handles[0] + handles[1]
+    assert len(all_handles) == 8
+    stats = server.run()
+    assert all(h.done() for h in all_handles)
+    assert stats.n_sessions == 8
+    assert stats.total_tokens == 2 * sum(2 + i % 2 for i in range(4))
+    # values stay oracle-exact under concurrent submission
+    for tid in (0, 1):
+        for i, h in enumerate(handles[tid]):
+            s = h.session
+            if s.profile.op in ("addition", "maximum"):
+                want = _oracle_decode(
+                    DecodeSession(0, s.profile, s.n_tokens,
+                                  seed=tid * 4 + i),
+                    s.profile.op, s.n_tokens)
+                np.testing.assert_array_equal(np.asarray(h.result()), want)
+
+
+def test_async_surface():
+    server = SimdramServer(n_machines=2, n_banks=4)
+    hs = [server.submit_session("qwen1_5_0_5b", n_tokens=2)
+          for _ in range(4)]
+
+    async def go():
+        stats = await server.run_async()
+        waited = await hs[0].wait_async()
+        return stats, waited
+
+    stats, waited = asyncio.run(go())
+    assert waited is hs[0] and all(h.done() for h in hs)
+    assert stats.n_sessions == 4
+
+
+# ---------------------------------------------------------------------------
+# satellite: drain() honors priority in packing order
+# ---------------------------------------------------------------------------
+
+def test_drain_priority_orders_packing():
+    m = SimdramMachine()
+    a = RNG.integers(0, 100, 64)
+    b = RNG.integers(0, 100, 64)
+    low = m.submit("addition", a, b, tenant="low", priority=0)
+    high = m.submit("multiplication", a, b, tenant="high", priority=5)
+    m.drain(n_banks=1)
+    # on one bank, the higher latency class issues first despite
+    # arriving second
+    assert high.timing.start_ns < low.timing.start_ns
+    np.testing.assert_array_equal(np.asarray(low.result()), (a + b) & 0xFF)
+    # equal priority keeps FIFO order (the pre-fix behavior is the tie
+    # default, not the override)
+    m2 = SimdramMachine()
+    f1 = m2.submit("addition", a, b, tenant="x")
+    f2 = m2.submit("multiplication", a, b, tenant="y")
+    m2.drain(n_banks=1)
+    assert f1.timing.start_ns < f2.timing.start_ns
+
+
+def test_drain_priority_takes_least_loaded_banks_first():
+    # two banks, three requests: the high-priority latecomer packs first,
+    # getting a bank to itself rather than queueing behind the others
+    m = SimdramMachine()
+    a = RNG.integers(0, 100, 64)
+    b = RNG.integers(0, 100, 64)
+    fs = [m.submit("multiplication", a, b, tenant=f"t{i}") for i in range(2)]
+    hi = m.submit("addition", a, b, tenant="hi", priority=9)
+    m.drain(n_banks=2)
+    assert hi.timing.queue_ns == 0.0
+    assert max(f.timing.start_ns for f in fs) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: batched drain (stacked banked dispatch before arbitration)
+# ---------------------------------------------------------------------------
+
+def test_drain_batched_values_and_single_request():
+    a = [RNG.integers(0, 100, 64) for _ in range(4)]
+    b = [RNG.integers(0, 100, 64) for _ in range(4)]
+    m = SimdramMachine()
+    futs = [m.submit("addition", a[i], b[i], tenant=f"s{i}")
+            for i in range(4)]
+    res = m.drain(n_banks=8, batch=True)
+    # 4 compatible submissions collapse into ONE bank-parallel request
+    assert res.n_requests == 1
+    assert len(res.requests[0].bank_ids) == 4
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      (a[i] + b[i]) & 0xFF)
+        assert f.timing is res.requests[0]          # riders share timing
+
+
+def test_drain_batched_chunks_to_bank_capacity():
+    a = [RNG.integers(0, 50, 32) for _ in range(6)]
+    m = SimdramMachine()
+    futs = [m.submit("addition", a[i], a[i], tenant=f"s{i}")
+            for i in range(6)]
+    res = m.drain(n_banks=4, batch=True)
+    assert res.n_requests == 2                       # 4 + 2
+    widths = sorted(len(r.bank_ids) for r in res.requests)
+    assert widths == [2, 4]
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      (a[i] * 2) & 0xFF)
+
+
+def test_drain_batched_groups_by_compatibility():
+    a = RNG.integers(0, 100, 64)
+    b = RNG.integers(0, 100, 64)
+    m = SimdramMachine()
+    adds = [m.submit("addition", a, b, tenant=f"a{i}") for i in range(2)]
+    muls = [m.submit("multiplication", a, b, tenant=f"m{i}")
+            for i in range(2)]
+    res = m.drain(n_banks=8, batch=True)
+    assert res.n_requests == 2                       # one per trace group
+    assert {r.name for r in res.requests} \
+        == {"addition/8b", "multiplication/8b"}
+    for f in adds:
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      (a + b) & 0xFF)
+    for f in muls:
+        np.testing.assert_array_equal(np.asarray(f.result()),
+                                      (a * b) & 0xFF)
+
+
+def test_drain_batched_defer_matches_replay_equivalence():
+    # no-regression gate: the stacked dispatch under "defer" must still
+    # satisfy the property-tested anchor — identical traces on N banks
+    # equal TraceReplayTiming.replay cycle-for-cycle
+    a = [RNG.integers(0, 100, 64) for _ in range(4)]
+    m = SimdramMachine()
+    futs = [m.submit("addition", a[i], a[i], tenant=f"s{i}")
+            for i in range(4)]
+    res = m.drain(n_banks=4, refresh_policy="defer", batch=True)
+    _, trace = m.memory.get("addition", 8, True)
+    want = TraceReplayTiming(m.timing).replay(trace, banks=4)
+    got = futs[0].replay
+    assert res.ns == pytest.approx(want.ns)
+    assert got.ns == pytest.approx(want.ns)
+    assert got.n_acts == want.n_acts
+    assert got.n_seqs == want.n_seqs
+    assert got.tfaw_stall_ns == pytest.approx(want.tfaw_stall_ns)
+    assert got.refresh_stall_ns == pytest.approx(want.refresh_stall_ns)
+
+
+def test_drain_batched_tenant_meters_sum_to_machine():
+    a = [RNG.integers(0, 100, 64) for _ in range(4)]
+    b = [RNG.integers(0, 100, 64) for _ in range(4)]
+    m = SimdramMachine(mode="replay")
+    futs = [m.submit("addition", a[i], b[i], tenant=f"s{i}")
+            for i in range(4)]
+    m.drain(n_banks=8, batch=True)
+    [f.result() for f in futs]
+    tenants = list(m.stats.tenants.values())
+    assert len(tenants) == 4
+    for meter in ("exec_ns", "exec_nj", "elem_ops", "replay_ns",
+                  "total_ns", "transpose_ns"):
+        total = sum(getattr(st, meter) for st in tenants)
+        assert total == pytest.approx(getattr(m.stats, meter)), meter
+    # counters count per rider by design: 4 riders, 1 machine dispatch
+    assert sum(st.n_programs for st in tenants) == 4
+    assert m.stats.n_programs == 1
+
+
+def test_submit_arrival_ns_reaches_request_timing():
+    m = SimdramMachine()
+    a = RNG.integers(0, 100, 32)
+    fut = m.submit("addition", a, a, arrival_ns=1000.0)
+    m.drain(n_banks=2)
+    t = fut.timing
+    assert t.arrival_ns >= 1000.0                    # cycle-quantized
+    assert t.start_ns >= t.arrival_ns and t.queue_ns >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: the whole-schedule memo
+# ---------------------------------------------------------------------------
+
+def test_schedule_memo_serves_repeated_steps():
+    a = [RNG.integers(0, 100, 64) for _ in range(4)]
+    m = SimdramMachine()
+    results = []
+    for _ in range(3):
+        futs = [m.submit("addition", a[i], a[i], tenant=f"s{i}")
+                for i in range(4)]
+        results.append((m.drain(n_banks=8, batch=True),
+                        [f.timing for f in futs]))
+    cs = m.memory.stats()
+    assert cs["schedule_misses"] == 1 and cs["schedule_hits"] == 2
+    first, later = results[0][0], results[2][0]
+    assert later.ns == first.ns and later.cycles == first.cycles
+    assert later.n_acts == first.n_acts
+    for rt0, rt2 in zip(results[0][1], results[2][1]):
+        assert rt2.start_ns == rt0.start_ns
+        assert rt2.finish_ns == rt0.finish_ns
+        assert rt2.stream_finish_ns == rt0.stream_finish_ns
+
+
+def test_schedule_memo_hit_is_stepped_loop_exact():
+    # a memo-served busy period must equal a freshly stepped one — run
+    # the same request set on a memo-less scheduler as the oracle
+    from repro.ops import BankScheduler
+    a = RNG.integers(0, 100, 64)
+    m = SimdramMachine()
+    shapes = []
+    for _ in range(2):
+        futs = [m.submit("addition", a, a, tenant=f"s{i}")
+                for i in range(3)]
+        m.drain(n_banks=4, batch=True)
+        shapes.append([f.timing for f in futs])
+    _, trace = m.memory.get("addition", 8, True)
+    fresh = BankScheduler(timing=m.timing, n_banks=4)
+    fresh.enqueue(trace, banks=3, tenant="s0", name="addition/8b")
+    want = fresh.run()
+    hit = shapes[1][0]
+    assert hit.finish_ns == pytest.approx(want.requests[0].finish_ns)
+    assert hit.n_acts == want.requests[0].n_acts
+
+
+def test_schedule_memo_relabels_live_requests():
+    # the memo key is content-only; a hit re-labels names/tenants/lanes
+    # from the live request set instead of echoing the cached ones
+    a = RNG.integers(0, 100, 64)
+    m = SimdramMachine()
+    f1 = m.submit("addition", a, a, tenant="alice")
+    m.drain(n_banks=2)
+    f2 = m.submit("addition", a, a, tenant="bob")
+    m.drain(n_banks=2)
+    assert m.memory.stats()["schedule_hits"] == 1
+    assert f2.timing.tenant == "bob" and f1.timing.tenant == "alice"
+    assert f2.timing.finish_ns == f1.timing.finish_ns
+
+
+def test_continuous_batcher_clock_advances_by_makespan():
+    m = SimdramMachine()
+    batcher = ContinuousBatcher(m, n_banks=4)
+    s = DecodeSession(0, profile_for("qwen1_5_0_5b"), 2)
+    batcher.admit(s)
+    assert batcher.clock_ns == 0.0
+    batcher.step()
+    t1 = batcher.clock_ns
+    assert t1 > 0 and not s.done
+    finished = batcher.step()
+    assert finished == [s] and s.done and batcher.active == []
+    assert batcher.clock_ns > t1
+    assert s.finish_ns == pytest.approx(batcher.clock_ns)
